@@ -1,0 +1,23 @@
+"""Shared benchmark helpers. Every benchmark prints ``name,us_per_call,derived``
+CSV rows (one per measured configuration)."""
+
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in seconds."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

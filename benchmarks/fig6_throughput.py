@@ -1,0 +1,47 @@
+"""Fig. 6: end-to-end inference throughput, ED-Batch vs the Cavs-DyNet proxy.
+
+Proxy mapping (DESIGN.md deviation #1): "Cavs DyNet" = best of agenda/depth
+batching + declaration-layout cells (pre-defined static subgraphs, DyNet
+memory policy); "ED-Batch" = learned-FSM batching + PQ-planned cells.
+Throughput = input instances per second over full forward passes.
+"""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.batching import best_baseline_schedule, schedule
+from repro.core.executor import DynamicExecutor, ExecStats
+from repro.core.rl import RLConfig, train_fsm
+from repro.models.workloads import WORKLOADS, make_workload
+
+from .common import emit, timeit
+
+
+def run(workloads=None, batch_size: int = 16, model_size: int = 32,
+        seed: int = 0):
+    rng = random.Random(seed)
+    rows = []
+    for name in workloads or WORKLOADS:
+        wl_base = make_workload(name, model_size, seed, layout="declaration")
+        wl_ed = make_workload(name, model_size, seed, layout="planned")
+        res = train_fsm([wl_ed.sample_graph(rng, 2) for _ in range(3)],
+                        RLConfig(max_iters=600, seed=seed))
+        g = wl_ed.sample_graph(rng, batch_size)
+
+        ex_base = DynamicExecutor(wl_base.impls, None)
+        ex_ed = DynamicExecutor(wl_ed.impls, None)
+        t_base = timeit(lambda: ex_base.run(g, best_baseline_schedule))
+        t_ed = timeit(lambda: ex_ed.run(g, res.policy))
+        thr_base = batch_size / t_base
+        thr_ed = batch_size / t_ed
+        emit(f"fig6/{name}/cavs-dynet-proxy", t_base * 1e6 / batch_size,
+             f"inst_per_s={thr_base:.1f}")
+        emit(f"fig6/{name}/ed-batch", t_ed * 1e6 / batch_size,
+             f"inst_per_s={thr_ed:.1f};speedup={thr_ed / thr_base:.2f}x")
+        rows.append((name, thr_base, thr_ed))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

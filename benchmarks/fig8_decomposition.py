@@ -1,0 +1,57 @@
+"""Fig. 8: inference time decomposition — construction / scheduling /
+execution — for the Cavs-DyNet proxy vs ED-Batch."""
+
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.batching import best_baseline_schedule
+from repro.core.executor import DynamicExecutor, ExecStats
+from repro.core.rl import RLConfig, train_fsm
+from repro.models.workloads import make_workload
+
+from .common import emit
+
+
+def run(workloads=("TreeLSTM", "LatticeLSTM"), batch_size: int = 16,
+        model_size: int = 32, seed: int = 0):
+    rng = random.Random(seed)
+    rows = []
+    for name in workloads:
+        for system, layout in (("cavs-dynet-proxy", "declaration"),
+                               ("ed-batch", "planned")):
+            wl = make_workload(name, model_size, seed, layout=layout)
+            if system == "ed-batch":
+                res = train_fsm([wl.sample_graph(rng, 2) for _ in range(3)],
+                                RLConfig(max_iters=600, seed=seed))
+                policy = res.policy
+            else:
+                policy = best_baseline_schedule
+            ex = DynamicExecutor(wl.impls, None)
+            # construction
+            t0 = time.perf_counter()
+            g = wl.sample_graph(rng, batch_size)
+            t_construct = time.perf_counter() - t0
+            # warm, then measure schedule+exec separately (fresh caches for
+            # scheduling time: use a fresh executor)
+            ex.run(g, policy)
+            ex2 = DynamicExecutor(wl.impls, None)
+            stats = ExecStats()
+            ex2.run(g, policy, stats)
+            # execution steady-state (schedule cached now)
+            stats2 = ExecStats()
+            ex2.run(g, policy, stats2)
+            emit(f"fig8/{name}/{system}",
+                 (t_construct + stats.schedule_time + stats2.exec_time) * 1e6,
+                 f"construct_ms={t_construct*1e3:.2f};"
+                 f"schedule_ms={stats.schedule_time*1e3:.2f};"
+                 f"exec_ms={stats2.exec_time*1e3:.2f};"
+                 f"batches={stats2.n_batches}")
+            rows.append((name, system, t_construct, stats.schedule_time,
+                         stats2.exec_time))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

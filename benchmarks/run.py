@@ -1,0 +1,41 @@
+"""Run every paper-table benchmark. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / fewer workloads")
+    args = ap.parse_args(argv)
+
+    from . import (fig6_throughput, fig8_decomposition, fig9_num_batches,
+                   table2_memplan, table3_rl_training,
+                   table4_subgraph_compile, table5_cortex_proxy)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    fig9_num_batches.run(batch_size=8 if args.quick else 16)
+    table3_rl_training.run()
+    table4_subgraph_compile.run(model_size=32 if args.quick else 64)
+    table2_memplan.run(model_size=32 if args.quick else 64)
+    table5_cortex_proxy.run(sizes=(32, 64) if args.quick else (64, 128, 256))
+    fig6_throughput.run(
+        workloads=["TreeLSTM", "LatticeLSTM"] if args.quick else None,
+        batch_size=8 if args.quick else 32,
+        model_size=16 if args.quick else 128)
+    fig8_decomposition.run(batch_size=8 if args.quick else 32,
+                           model_size=16 if args.quick else 128)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,51 @@
+"""Table 2: static-subgraph ablation — DyNet declaration layout vs PQ-planned.
+
+Per cell: latency (batched apply), memory kernels per subgraph invocation,
+and bytes moved (batch = 8, model size = 64, as in the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.subgraph import CompiledCell
+from repro.models.cells import CELLS
+
+from .common import emit, timeit
+
+
+def run(model_size: int = 64, batch: int = 8, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for name, build in CELLS.items():
+        prog = build(model_size, model_size)
+        planned = CompiledCell(prog, "planned")
+        dynet = CompiledCell(prog, "declaration")
+        pbuf_p = planned.init_params(rng)
+        params = {n: np.asarray(jax.lax.dynamic_slice(
+            pbuf_p, (planned.offsets[n],), (v.size,)).reshape(v.shape))
+            for n, v in prog.vars.items() if v.space == "param"}
+        pbuf_d = dynet.pack_params(params)
+        inputs = {n: jnp.asarray(
+            rng.standard_normal((batch,) + prog.vars[n].shape), jnp.float32)
+            for n in prog.inputs}
+
+        t_d = timeit(lambda: jax.block_until_ready(
+            list(dynet.apply(pbuf_d, inputs).values())))
+        t_p = timeit(lambda: jax.block_until_ready(
+            list(planned.apply(pbuf_p, inputs).values())))
+        sd, sp = dynet.stats, planned.stats
+        emit(f"table2/{name}", t_p * 1e6,
+             f"lat_ratio={t_d / t_p:.2f};"
+             f"memk={sd.n_mem_kernels}->{sp.n_mem_kernels};"
+             f"bytes={sd.bytes_moved(batch)}->{sp.bytes_moved(batch)};"
+             f"bytes_ratio={sd.bytes_moved(batch) / max(sp.bytes_moved(batch), 1):.1f};"
+             f"zero_copy={planned.zero_copy_fraction():.2f}")
+        rows.append((name, t_d, t_p, sd, sp))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Table 3: RL training time and iterations per workload (paper: tens of ms
+to ~22 s, 50–1000 iterations, early stop at the lower bound)."""
+
+from __future__ import annotations
+
+import random
+
+from repro.core.rl import RLConfig, train_fsm
+from repro.models.workloads import WORKLOADS, make_workload
+
+from .common import emit
+
+
+def run(seed: int = 0):
+    rng = random.Random(seed)
+    rows = []
+    for name in WORKLOADS:
+        wl = make_workload(name, model_size=8)
+        graphs = [wl.sample_graph(rng, 2) for _ in range(3)]
+        res = train_fsm(graphs, RLConfig(max_iters=1000, seed=seed))
+        emit(f"table3/{name}", res.train_time_s * 1e6,
+             f"iters={res.iters};reached_lb={res.reached_lower_bound};"
+             f"batches={res.best_batches};lb={res.lower_bound}")
+        rows.append((name, res))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""End-to-end driver: serve a small LM with batched requests.
+
+The request wave is scheduled as a typed dataflow graph (prefill types by
+prompt length, decode chains) through the same Alg.1 machinery the paper
+uses for dynamic DNNs — then executed with continuous batching.
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch qwen2-0.5b]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.arch.model import TransformerLM
+from repro.configs import get_config
+from repro.core.batching import depth_schedule
+from repro.serve.engine import ServeEngine, request_graph, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = TransformerLM(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, int(rng.integers(4, 20))))
+               for _ in range(args.requests)]
+
+    # how many batches would the naive depth-based policy launch?
+    g = request_graph([Request(p, args.max_new) for p in prompts])
+    naive = len(depth_schedule(g))
+
+    eng = ServeEngine(model, params, cache_len=64)
+    outs, stats = eng.generate(prompts, max_new=args.max_new)
+    print(f"served {len(outs)} requests / {stats.tokens_out} tokens "
+          f"in {stats.wall_s:.2f}s ({stats.tok_per_s:.1f} tok/s)")
+    print(f"batches: {stats.n_batches} "
+          f"({stats.n_prefill_batches} prefill + "
+          f"{stats.n_decode_batches} decode waves); "
+          f"depth-based baseline would launch {naive}")
+    print("sample output:", outs[0])
+
+
+if __name__ == "__main__":
+    main()

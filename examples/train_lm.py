@@ -1,0 +1,29 @@
+"""End-to-end driver: train a language model on the synthetic corpus.
+
+Default is a CPU-friendly reduced config; pass --d-model 512 --layers for
+larger runs (the ~100M-scale driver used on real hardware).
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-0.5b --steps 200
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+    train_main(["--arch", args.arch, "--reduced",
+                "--d-model", str(args.d_model),
+                "--steps", str(args.steps),
+                "--batch", str(args.batch), "--seq", str(args.seq),
+                "--checkpoint", f"/tmp/{args.arch}-lm.npz"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end *training* of a dynamic DNN through the batched executor.
+
+A tiny TreeGRU sentiment-style classifier: labels are synthesized from a
+hidden teacher rule (majority of leaf-token parities), so the loss genuinely
+decreases. Gradients flow through the FSM-scheduled batched execution —
+the schedule is a trace-time decision, everything inside is pure JAX.
+
+    PYTHONPATH=src python examples/tree_classifier.py
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import DynamicExecutor
+from repro.core.rl import RLConfig, train_fsm
+from repro.models.workloads import make_workload
+from repro.models.data import TreeNode
+
+
+def leaf_tokens(t: TreeNode):
+    if t.is_leaf:
+        return [t.token]
+    return leaf_tokens(t.left) + leaf_tokens(t.right)
+
+
+def main():
+    rng = random.Random(0)
+    wl = make_workload("TreeGRU", model_size=32)
+    res = train_fsm([wl.sample_graph(rng, 2) for _ in range(3)],
+                    RLConfig(max_iters=400))
+    ex = DynamicExecutor(wl.impls, None)
+
+    # trainable leaves: the internal cell + output head parameters
+    internal = wl.cells["TreeGRU-Internal"]
+    params = {"I": internal.init_params(np.random.default_rng(1))}
+
+    def batch_loss(params, graph, labels, root_ids):
+        out = ex.run(graph, res.policy, params=params)
+        logits = out.field("y", root_ids)            # (B, n_classes)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(len(labels)), labels])
+
+    opt_lr = 0.05
+    losses = []
+    for step in range(30):
+        g = wl.sample_graph(rng, 8)
+        # teacher labels: parity-majority of leaf tokens per tree root
+        roots, labels = [], []
+        # trees were appended sequentially; roots are O nodes whose input has
+        # no successor O later in the same tree — use the final O per tree:
+        o_nodes = [n.id for n in g.nodes if n.type == "O"]
+        # identify per-tree segments by embed runs
+        seg_start = [n.id for n in g.nodes if n.type == "E" and
+                     (n.id == 0 or g.nodes[n.id - 1].type in ("O",))]
+        for s, e in zip(seg_start, seg_start[1:] + [len(g)]):
+            os_in_seg = [i for i in o_nodes if s <= i < e]
+            roots.append(os_in_seg[-1])
+            toks = [n.attrs["aux"] for n in g.nodes[s:e] if n.type == "E"]
+            labels.append(int(np.mean([t % 2 for t in toks]) > 0.5))
+        labels = jnp.asarray(labels)
+        loss, grads = jax.value_and_grad(batch_loss)(params, g, labels,
+                                                     np.asarray(roots))
+        params = jax.tree.map(lambda p, gr: p - opt_lr * gr, params, grads)
+        losses.append(float(loss))
+        if step % 5 == 0:
+            print(f"step {step:3d} loss {loss:.4f}")
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'improved' if losses[-1] < losses[0] else 'no improvement'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,299 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (causal /
+sliding-window / cross), SwiGLU & GeLU MLPs, and MoE with ED-Batch-style
+sorted contiguous dispatch.
+
+All functions are pure; parameters are dicts of arrays created by the
+matching ``init_*`` functions (which are only ever materialized at reduced
+size — full-size models go through ``jax.eval_shape``).
+
+The MoE dispatch is the paper's memory-layout insight applied to expert
+parallelism: assignments are *sorted by expert id* so each expert's token
+batch is contiguous and aligned in the staging buffer — one slice per expert
+GEMM instead of a gather per expert (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ArchConfig
+
+Dtype = jnp.dtype
+
+
+# -----------------------------------------------------------------------------
+# Norm + RoPE
+# -----------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(d_head: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# Attention
+# -----------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False, dtype=jnp.float32):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d, h * dh), dtype) * s,
+        "wk": jax.random.normal(k2, (d, kv * dh), dtype) * s,
+        "wv": jax.random.normal(k3, (d, kv * dh), dtype) * s,
+        "wo": jax.random.normal(k4, (h * dh, d), dtype) * s,
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((kv * dh,), dtype)
+        p["bv"] = jnp.zeros((kv * dh,), dtype)
+    return p
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _sdpa(q, k, v, mask, dtype):
+    """q: (B,S,H,Dh); k/v: (B,T,KV,Dh); mask: (B,1,S,T) or None."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k).astype(jnp.float32)
+    scores = scores * (Dh ** -0.5)
+    if mask is not None:  # mask: (B or 1, S, T)
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H * Dh)
+
+
+ATTN_CHUNK = 512
+
+
+def _sdpa_chunked(q, k, v, window: int, dtype, chunk: int = ATTN_CHUNK):
+    """Blockwise causal attention over q chunks (lax.scan) so the score
+    matrix never materializes beyond (B, H, chunk, S) — the jnp analogue of
+    kernels/flash_attention (which is the TPU-native path)."""
+    B, S, H, Dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    chunk = min(chunk, S)
+    if S % chunk:
+        return _sdpa(q, k, v, causal_mask(S, window), dtype)
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, KV, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+    cols = jnp.arange(S)
+
+    def body(_, inp):
+        ci, qb = inp                                  # qb: (B, C, KV, G, Dh)
+        rows = ci * chunk + jnp.arange(chunk)
+        m = rows[:, None] >= cols[None, :]
+        if window:
+            m = m & (rows[:, None] - cols[None, :] < window)
+        s = jnp.einsum("bckgd,btkd->bkgct", qb, k).astype(jnp.float32)
+        s = jnp.where(m[None, None, None], s * (Dh ** -0.5), -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(dtype)
+        o = jnp.einsum("bkgct,btkd->bckgd", w, v)
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nc), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, S, H * Dh)
+    return out
+
+
+def attention(p, x, cfg: ArchConfig, positions, mask, kv=None):
+    """Self-attention when kv is None, else cross-attention onto kv (no RoPE
+    on the encoder side — the stubbed modality embeddings carry no order)."""
+    h, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    src = x if kv is None else kv
+    k = src @ p["wk"]
+    v = src @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    q = _split_heads(q, h, dh)
+    k = _split_heads(k, nkv, dh)
+    v = _split_heads(v, nkv, dh)
+    if kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        S = q.shape[1]
+        if S > ATTN_CHUNK:
+            out = _sdpa_chunked(q, k, v, cfg.sliding_window, x.dtype)
+            return out @ p["wo"]
+    out = _sdpa(q, k, v, mask, x.dtype)
+    return out @ p["wo"]
+
+
+def causal_mask(S: int, window: int = 0):
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window:
+        m = m & (i - j < window)
+    return m[None]  # (1, S, T)
+
+
+def attention_with_cache(p, x, cfg: ArchConfig, cache, pos):
+    """Single-token decode. cache: dict(k=(B,T,KV,Dh), v=...) with T the
+    cache capacity (a ring when cfg.sliding_window > 0). ``pos`` is the
+    absolute position — a scalar or a per-request (B,) vector (continuous
+    batching serves requests at different depths in one batch)."""
+    h, nkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    B = x.shape[0]
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    k_new = x @ p["wk"]
+    v_new = x @ p["wv"]
+    if "bk" in p:
+        k_new, v_new = k_new + p["bk"], v_new + p["bv"]
+    q = _split_heads(q, h, dh)                      # (B,1,H,Dh)
+    k_new = _split_heads(k_new, nkv, dh)
+    v_new = _split_heads(v_new, nkv, dh)
+    posv = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(pos)), (B,))  # (B,)
+    q = apply_rope(q, posv[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, posv[:, None], cfg.rope_theta)  # rope at write
+    T = cache["k"].shape[1]
+    slot = posv % T                                  # ring slot (full: T>=S)
+    barange = jnp.arange(B)
+    ck = cache["k"].at[barange, slot].set(k_new[:, 0])
+    cv = cache["v"].at[barange, slot].set(v_new[:, 0])
+    idx = jnp.arange(T)
+    # A slot is valid if already written. Full attention: capacity T covers
+    # all positions, so idx <= pos. Ring (sliding window): once pos+1 >= T
+    # every slot holds one of the last T positions — all valid.
+    valid = (idx[None] <= posv[:, None]) | (posv[:, None] + 1 >= T)
+    mask = valid[:, None, :]                         # (B,1,T)
+    out = _sdpa(q, ck, cv, mask, x.dtype)
+    return out @ p["wo"], {"k": ck, "v": cv}
+
+
+# -----------------------------------------------------------------------------
+# MLPs
+# -----------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = d ** -0.5
+    if cfg.mlp_type == "swiglu":
+        return {"w_gate": jax.random.normal(k1, (d, f), dtype) * s,
+                "w_up": jax.random.normal(k2, (d, f), dtype) * s,
+                "w_down": jax.random.normal(k3, (f, d), dtype) * (f ** -0.5)}
+    return {"w_in": jax.random.normal(k1, (d, f), dtype) * s,
+            "b_in": jnp.zeros((f,), dtype),
+            "w_out": jax.random.normal(k2, (f, d), dtype) * (f ** -0.5),
+            "b_out": jnp.zeros((d,), dtype)}
+
+
+def mlp(p, x, cfg: ArchConfig):
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_in"] + p["b_in"]) @ p["w_out"] + p["b_out"]
+
+
+# -----------------------------------------------------------------------------
+# MoE with sorted contiguous dispatch
+# -----------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "router": jax.random.normal(k1, (d, e), dtype) * s,
+        "w_gate": jax.random.normal(k2, (e, d, f), dtype) * s,
+        "w_up": jax.random.normal(k3, (e, d, f), dtype) * s,
+        "w_down": jax.random.normal(k4, (e, f, d), dtype) * (f ** -0.5),
+    }
+
+
+def moe(p, x, cfg: ArchConfig, constrain=None, n_groups: int = 1):
+    """Top-k MoE with grouped sorted dispatch. x: (N, D) flattened tokens.
+
+    The paper's memory-layout insight applied to expert parallelism: within
+    each group, assignments are argsorted by expert id so the staging buffer
+    is contiguous and aligned per expert — each expert GEMM reads one (C, D)
+    slice instead of a gather per expert. Groups are data-parallel shards
+    (dispatch is local to a shard; experts are "model"-sharded), which is
+    what lets GSPMD partition the scatter instead of replicating it.
+    Tokens beyond expert capacity are dropped (switch-style).
+    """
+    cst = constrain or (lambda t, kind: t)
+    N, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    G = n_groups if n_groups > 0 and N % n_groups == 0 else 1
+    Sg = N // G
+    C = int(np.ceil(cfg.capacity_factor * Sg * K / E))
+    logits = (x @ p["router"]).astype(jnp.float32)            # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (N, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    fe = expert_idx.reshape(G, Sg * K)
+    order = jnp.argsort(fe, axis=-1)                           # sort by expert
+    se = jnp.take_along_axis(fe, order, axis=-1)
+    tok = order // K                                           # in-group token
+    gates = jnp.take_along_axis(
+        gate_vals.reshape(G, Sg * K).astype(jnp.float32), order, axis=-1)
+    first = jax.vmap(lambda s: jnp.searchsorted(s, s, side="left"))(se)
+    pos_in_e = jnp.arange(Sg * K)[None] - first
+    keep = pos_in_e < C
+    dest = jnp.where(keep, se * C + pos_in_e, E * C)           # overflow slot
+
+    xg = x.reshape(G, Sg, D)
+    gathered = cst(jnp.take_along_axis(xg, tok[:, :, None], axis=1),
+                   "moe_tokens")                               # (G, Sg*K, D)
+    buf = jax.vmap(
+        lambda d, v: jnp.zeros((E * C + 1, D), x.dtype).at[d].set(v)
+    )(dest, gathered)
+    hidden = cst(buf[:, : E * C].reshape(G, E, C, D), "moe_buf")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", hidden, p["w_gate"]))
+    h = h * jnp.einsum("gecd,edf->gecf", hidden, p["w_up"])
+    out = cst(jnp.einsum("gecf,efd->gecd", h, p["w_down"]), "moe_buf")
+    out = jnp.concatenate(
+        [out.reshape(G, E * C, D), jnp.zeros((G, 1, D), x.dtype)], axis=1)
+
+    contrib = jnp.take_along_axis(out, dest[:, :, None], axis=1) \
+        * (gates * keep)[:, :, None].astype(x.dtype)
+    y = jax.vmap(
+        lambda t, c: jnp.zeros((Sg, D), x.dtype).at[t].add(c)
+    )(tok, cst(contrib, "moe_tokens"))
+    y = cst(y, "moe_tokens").reshape(N, D)
+
+    # switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], E), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,314 @@
+"""Composable LM over the six architecture families.
+
+A model is a repeating block *pattern* (see ArchConfig.pattern): layers are
+executed repeat-major under one ``lax.scan`` whose xs are the per-pattern
+stacked parameters — the HLO contains a single pattern-group body regardless
+of depth (essential for the 40-way dry-run compile budget).
+
+Three entrypoints:
+  ``forward``      full-sequence logits (+ MoE aux) — training / prefill_32k
+  ``prefill``      full sequence -> (last logits, decode caches)
+  ``decode_step``  one token against caches — decode_32k / long_500k
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from . import ssm as S
+from .config import ArchConfig, LayerSpec
+
+
+class TransformerLM:
+    def __init__(self, cfg: ArchConfig, dtype=jnp.float32,
+                 unroll: bool = False, remat: bool = False):
+        """``unroll``: python-loop the repeats instead of lax.scan — the HLO
+        then carries every layer explicitly, so ``compiled.cost_analysis()``
+        reports true whole-model FLOPs/bytes (XLA counts a while body once).
+        ``remat``: checkpoint each block (training memory)."""
+        self.cfg = cfg
+        self.dtype = dtype
+        self.unroll = unroll
+        self.remat = remat
+        # Nested remat: checkpoint each LAYER inside the pattern group, so
+        # the backward pass holds one layer's transients (not the group's).
+        self.layer_remat = False
+        # Optional launch.sharding.Partitioner: when set, activation
+        # sharding constraints are emitted at the residual/logits boundaries.
+        self.partitioner = None
+
+    def _wsc(self, x, kind: str):
+        if self.partitioner is None:
+            return x
+        return self.partitioner.constrain(x, kind)
+
+    def _scan_blocks(self, body, carry, stacked):
+        """lax.scan or unrolled python loop over the repeat dimension."""
+        fn = jax.checkpoint(body) if self.remat else body
+        if not self.unroll:
+            return jax.lax.scan(fn, carry, stacked)
+        ys = []
+        R = self.cfg.n_repeats
+        for r in range(R):
+            lps = jax.tree.map(lambda a: a[r], stacked)
+            carry, y = fn(carry, lps)
+            ys.append(y)
+        if all(y is None for y in ys):
+            return carry, None
+        return carry, jax.tree.map(lambda *xs: jnp.stack(xs), *ys)
+
+    # -- parameters ----------------------------------------------------------
+
+    def _init_layer(self, key, spec: LayerSpec):
+        cfg, dt = self.cfg, self.dtype
+        k1, k2 = jax.random.split(key)
+        p: dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dt)}
+        if spec.mixer == "attn":
+            p["attn"] = L.init_attention(k1, cfg, dtype=dt)
+        elif spec.mixer == "cross_attn":
+            p["attn"] = L.init_attention(k1, cfg, cross=True, dtype=dt)
+        else:
+            p["ssm"] = S.init_ssm(k1, cfg, dtype=dt)
+        if spec.ffn == "dense":
+            p["norm2"] = jnp.ones((cfg.d_model,), dt)
+            p["mlp"] = L.init_mlp(k2, cfg, dtype=dt)
+        elif spec.ffn == "moe":
+            p["norm2"] = jnp.ones((cfg.d_model,), dt)
+            p["moe"] = L.init_moe(k2, cfg, dtype=dt)
+        return p
+
+    def init_params(self, key):
+        cfg, dt = self.cfg, self.dtype
+        keys = jax.random.split(key, 3 + len(cfg.pattern))
+        blocks = []
+        for pi, spec in enumerate(cfg.pattern):
+            rkeys = jax.random.split(keys[pi], cfg.n_repeats)
+            blocks.append(jax.vmap(lambda k: self._init_layer(k, spec))(rkeys))
+        return {
+            "embed": jax.random.normal(keys[-3], (cfg.vocab, cfg.d_model), dt)
+            * 0.02,
+            "blocks": tuple(blocks),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab), dt)
+            * (cfg.d_model ** -0.5),
+        }
+
+    def param_specs(self):
+        """Abstract parameter shapes (no allocation) for the dry-run."""
+        return jax.eval_shape(
+            lambda: self.init_params(jax.random.PRNGKey(0)))
+
+    # -- layer application ---------------------------------------------------
+
+    def _apply_layer(self, x, lp, spec: LayerSpec, positions, mask,
+                     image_embeds):
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            mix = L.attention(lp["attn"], h, cfg, positions, mask)
+        elif spec.mixer == "cross_attn":
+            mix = L.attention(lp["attn"], h, cfg, positions, None,
+                              kv=image_embeds)
+        else:
+            mix, _ = S.ssm_block(lp["ssm"], h, cfg)
+        x = x + mix
+        aux = jnp.zeros((), jnp.float32)
+        if spec.ffn == "dense":
+            x = x + L.mlp(lp["mlp"], L.rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                          cfg)
+        elif spec.ffn == "moe":
+            h2 = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            B_, S_, D_ = h2.shape
+            y, aux = L.moe(lp["moe"], h2.reshape(B_ * S_, D_), cfg,
+                           constrain=self.partitioner and self.partitioner.constrain,
+                           n_groups=B_ if S_ > 1 else 1)
+            x = x + y.reshape(B_, S_, D_)
+        return x, aux
+
+    def forward(self, params, tokens, image_embeds=None):
+        """tokens: (B, S) -> logits (B, S, V), aux_loss scalar."""
+        cfg = self.cfg
+        B, S_ = tokens.shape
+        x = self._wsc(params["embed"][tokens], "residual")
+        positions = jnp.broadcast_to(jnp.arange(S_)[None], (B, S_))
+        mask = L.causal_mask(S_, cfg.sliding_window)
+        aux_total = jnp.zeros((), jnp.float32)
+
+        def one_layer(x, lp, spec):
+            return self._apply_layer(x, lp, spec, positions, mask,
+                                     image_embeds)
+
+        def block(carry, lps):
+            x, aux = carry
+            for spec, lp in zip(cfg.pattern, lps):
+                fn = (jax.checkpoint(partial(one_layer, spec=spec))
+                      if self.layer_remat else partial(one_layer, spec=spec))
+                x, a = fn(x, lp)
+                aux = aux + a
+            return (self._wsc(x, "residual"), aux), None
+
+        (x, aux_total), _ = self._scan_blocks(block, (x, aux_total),
+                                              params["blocks"])
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        return self._wsc(x @ params["lm_head"], "logits"), aux_total
+
+    def loss(self, params, batch):
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("image_embeds"))
+        labels = batch["labels"]
+        # Gather-free cross entropy: one_hot keeps the vocab axis sharded
+        # under GSPMD (take_along_axis would force an all-gather of logits).
+        logits32 = self._wsc(logits.astype(jnp.float32), "logits")
+        lse = self._wsc(jax.nn.logsumexp(logits32, axis=-1), "nll")
+        oh = self._wsc(jax.nn.one_hot(labels, logits.shape[-1],
+                                      dtype=jnp.float32), "one_hot")
+        gold = jnp.sum(logits32 * oh, axis=-1)
+        nll = lse - gold
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(nll)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0) \
+            + 0.01 * aux
+
+    # -- serving -------------------------------------------------------------
+
+    def init_cache(self, batch: int, seq_len: int):
+        """Decode caches, one stacked entry per pattern position."""
+        cfg, dt = self.cfg, self.dtype
+        T = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+        R = cfg.n_repeats
+        caches = []
+        for spec in cfg.pattern:
+            if spec.mixer == "attn":
+                shape = (R, batch, T, cfg.n_kv_heads, cfg.d_head)
+                caches.append({"k": jnp.zeros(shape, dt),
+                               "v": jnp.zeros(shape, dt)})
+            elif spec.mixer == "cross_attn":
+                shape = (R, batch, cfg.n_image_tokens, cfg.n_kv_heads,
+                         cfg.d_head)
+                caches.append({"k": jnp.zeros(shape, dt),
+                               "v": jnp.zeros(shape, dt)})
+            else:
+                c = S.init_ssm_cache(cfg, batch, dt)
+                caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), c))
+        return tuple(caches)
+
+    def cache_specs(self, batch: int, seq_len: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, seq_len))
+
+    def _decode_layer(self, x, lp, cache, spec: LayerSpec, pos):
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            mix, cache = L.attention_with_cache(lp["attn"], h, cfg, cache, pos)
+        elif spec.mixer == "cross_attn":
+            # cross-attn caches hold the projected image K/V; plain SDPA.
+            q = h @ lp["attn"]["wq"]
+            q = L._split_heads(q, cfg.n_heads, cfg.d_head)
+            mix = L._sdpa(q, cache["k"], cache["v"], None, h.dtype)
+            mix = mix @ lp["attn"]["wo"]
+        else:
+            mix, cache = S.ssm_decode(lp["ssm"], h, cfg, cache)
+        x = x + mix
+        if spec.ffn == "dense":
+            x = x + L.mlp(lp["mlp"], L.rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                          cfg)
+        elif spec.ffn == "moe":
+            h2 = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            B_, S_, D_ = h2.shape
+            y, _ = L.moe(lp["moe"], h2.reshape(B_ * S_, D_), cfg,
+                         constrain=self.partitioner and self.partitioner.constrain,
+                         n_groups=B_ if S_ > 1 else 1)
+            x = x + y.reshape(B_, S_, D_)
+        return x, cache
+
+    def decode_step(self, params, token, caches, pos):
+        """token: (B,) int32; caches from init_cache/prefill; pos: scalar.
+        Returns (logits (B, V), new caches)."""
+        cfg = self.cfg
+        x = params["embed"][token][:, None]            # (B, 1, D)
+        new_caches = []
+        for pi, spec in enumerate(cfg.pattern):
+            def block(x, scanned, spec=spec):
+                lp, cache = scanned
+                x, new_cache = self._decode_layer(x, lp, cache, spec, pos)
+                return x, new_cache
+
+            x, nc = self._scan_blocks(block, x,
+                                      (params["blocks"][pi], caches[pi]))
+            new_caches.append(nc)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, 0] @ params["lm_head"]
+        return logits, tuple(new_caches)
+
+    def prefill(self, params, tokens, image_embeds=None, cache_len: int = 0):
+        """Run the full prompt, returning (last-position logits, caches of
+        capacity ``cache_len`` >= S for continued decoding). Dry-run decode
+        shapes take caches as inputs directly."""
+        cfg = self.cfg
+        B, S_ = tokens.shape
+        self._prefill_pad = max(cache_len, S_) - S_
+        x = self._wsc(params["embed"][tokens], "residual")
+        positions = jnp.broadcast_to(jnp.arange(S_)[None], (B, S_))
+        mask = L.causal_mask(S_, cfg.sliding_window)
+        new_caches = []
+        for pi, spec in enumerate(cfg.pattern):
+            def block(x, lp, spec=spec):
+                c = self._prefill_layer(x, lp, spec, positions, mask,
+                                        image_embeds)
+                return self._wsc(c[0], "residual"), c[1]
+
+            x, nc = self._scan_blocks(block, x, params["blocks"][pi])
+            new_caches.append(nc)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = x[:, -1] @ params["lm_head"]
+        return logits, tuple(new_caches)
+
+    def _prefill_layer(self, x, lp, spec: LayerSpec, positions, mask,
+                       image_embeds):
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            mix = L.attention(lp["attn"], h, cfg, positions, mask)
+            k = h @ lp["attn"]["wk"]
+            v = h @ lp["attn"]["wv"]
+            if "bk" in lp["attn"]:
+                k, v = k + lp["attn"]["bk"], v + lp["attn"]["bv"]
+            k = L.apply_rope(L._split_heads(k, cfg.n_kv_heads, cfg.d_head),
+                             positions, cfg.rope_theta)
+            v = L._split_heads(v, cfg.n_kv_heads, cfg.d_head)
+            pad = getattr(self, "_prefill_pad", 0)
+            if pad:
+                padding = ((0, 0), (0, pad), (0, 0), (0, 0))
+                k, v = jnp.pad(k, padding), jnp.pad(v, padding)
+            cache = {"k": k, "v": v}
+        elif spec.mixer == "cross_attn":
+            mix = L.attention(lp["attn"], h, cfg, positions, None,
+                              kv=image_embeds)
+            k = L._split_heads(image_embeds @ lp["attn"]["wk"],
+                               cfg.n_kv_heads, cfg.d_head)
+            v = L._split_heads(image_embeds @ lp["attn"]["wv"],
+                               cfg.n_kv_heads, cfg.d_head)
+            cache = {"k": k, "v": v}
+        else:
+            mix, st = S.ssm_block(lp["ssm"], h, cfg, return_cache=True)
+            cache = st
+        x = x + mix
+        if spec.ffn == "dense":
+            x = x + L.mlp(lp["mlp"], L.rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                          cfg)
+        elif spec.ffn == "moe":
+            h2 = L.rmsnorm(x, lp["norm2"], cfg.norm_eps)
+            B_, S_, D_ = h2.shape
+            y, _ = L.moe(lp["moe"], h2.reshape(B_ * S_, D_), cfg,
+                         constrain=self.partitioner and self.partitioner.constrain,
+                         n_groups=B_ if S_ > 1 else 1)
+            x = x + y.reshape(B_, S_, D_)
+        return x, cache

@@ -1,0 +1,196 @@
+"""State-space duality (SSD / Mamba-2, arXiv:2405.21060) blocks in JAX.
+
+The chunked SSD algorithm: sequence split into chunks of Q steps; the
+intra-chunk part is a small masked "attention" (MXU-friendly), the
+inter-chunk part a first-order recurrence over per-chunk states carried by
+``lax.scan``. Jamba's Mamba-1 layers are expressed in this parameterization
+too (DESIGN.md deviation #5).
+
+Decode is O(1): a single state update per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+
+
+def init_ssm(key, cfg: ArchConfig, dtype=jnp.float32):
+    d, di = cfg.d_model, cfg.d_inner
+    nh, n, g = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    # in_proj packs [z (di), x (di), B (g*n), C (g*n), dt (nh)]
+    proj_out = 2 * di + 2 * g * n + nh
+    return {
+        "in_proj": jax.random.normal(k1, (d, proj_out), dtype) * s,
+        "conv_w": jax.random.normal(k2, (cfg.ssm_conv, di + 2 * g * n), dtype) * 0.2,
+        "conv_b": jnp.zeros((di + 2 * g * n,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),          # A = -exp(A_log) in (-inf,0)
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": jax.random.normal(k3, (di, d), dtype) * (di ** -0.5),
+    }
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-triangular segment sums:
+    out[..., i, j] = sum_{k in (j, i]} x[..., k]  (i >= j)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)[:, None]
+    j = jnp.arange(Q)[None, :]
+    return jnp.where(i >= j, out, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    x:  (b, l, h, p)    inputs per head
+    dt: (b, l, h)       positive step sizes
+    A:  (h,)            negative decay rates
+    B:  (b, l, g, n)    input maps (g groups broadcast over heads)
+    C:  (b, l, g, n)    output maps
+    Returns (y (b, l, h, p), final_state (b, h, p, n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    c, q = l // chunk, chunk
+    rep = h // g
+    xs = x.reshape(b, c, q, h, p)
+    dts = dt.reshape(b, c, q, h)
+    Bs = jnp.repeat(B.reshape(b, c, q, g, n), rep, axis=3)   # (b,c,q,h,n)
+    Cs = jnp.repeat(C.reshape(b, c, q, g, n), rep, axis=3)
+    dA = dts * A                                              # (b,c,q,h) <= 0
+    dA_cum = jnp.cumsum(dA, axis=2)                           # within chunk
+
+    # Decay/score tensors are exp(<=0) in [0,1] — safe in the model dtype.
+    # Keeping them out of f32 halves the dominant training-memory term
+    # (EXPERIMENTS.md §Perf, jamba iteration 2); cumsums stay f32.
+    wdt = x.dtype
+
+    # 1) intra-chunk (diagonal blocks): masked pseudo-attention
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2))).astype(wdt)  # (b,c,h,q,q)
+    scores = jnp.einsum("bcqhn,bcshn->bchqs", Cs, Bs) * L
+    y_diag = jnp.einsum("bchqs,bcsh,bcshp->bcqhp",
+                        scores, dts.astype(wdt), xs)
+
+    # 2) per-chunk output states (what each chunk contributes forward)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum).astype(wdt)
+    states = jnp.einsum("bcqhn,bcqh,bcqh,bcqhp->bchpn",
+                        Bs, decay_to_end, dts.astype(wdt), xs)  # (b,c,h,p,n)
+
+    # 3) inter-chunk recurrence over c
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                # (b,c,h)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                          # (b,h,p,n), (b,h)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                      # emit PRE-state
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (b,c,h,p,n)
+
+    # 4) inter-chunk output: contribution of the carried state
+    state_decay = jnp.exp(dA_cum).astype(wdt)                  # (b,c,q,h)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                       Cs, prev_states.astype(wdt), state_decay)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One-token update. x: (b,h,p); dt: (b,h); B/C: (b,g,n);
+    state: (b,h,p,n) -> (y (b,h,p), new_state)."""
+    g = B.shape[1]
+    rep = A.shape[0] // g
+    Bh = jnp.repeat(B, rep, axis=1)                            # (b,h,n)
+    Ch = jnp.repeat(C, rep, axis=1)
+    dA = jnp.exp(dt * A)                                       # (b,h)
+    new = state * dA[:, :, None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhpn", dt, Bh, x)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, new)
+    return y, new
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv. u: (B, L, Ch); w: (K, Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for k in range(K):
+        out = out + pad[:, k:k + u.shape[1], :] * w[k]
+    return out + b
+
+
+def ssm_block(p, x, cfg: ArchConfig, state=None, return_cache: bool = False):
+    """Full Mamba-2 mixer over a sequence. x: (B, L, D).
+
+    Returns (out, final_state) or, with ``return_cache``, (out, decode cache
+    dict matching :func:`init_ssm_cache`)."""
+    B_, L, D = x.shape
+    di, nh, hd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xin, Bv, Cv = jnp.split(xbc, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                     # (B,L,nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, final = ssd_scan(
+        xin.reshape(B_, L, nh, hd), dt, A,
+        Bv.reshape(B_, L, g, n), Cv.reshape(B_, L, g, n),
+        cfg.ssm_chunk, state)
+    y = y + xin.reshape(B_, L, nh, hd) * p["D"][:, None]
+    y = y.reshape(B_, L, di).astype(x.dtype)
+    from .layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_cache:
+        K = cfg.ssm_conv
+        return out, {"state": final.astype(x.dtype),
+                     "conv": xbc_raw[:, L - (K - 1):, :]}
+    return out, final
+
+
+def ssm_decode(p, x, cfg: ArchConfig, cache):
+    """One-token decode. x: (B, 1, D); cache: {'state': (B,h,p,n),
+    'conv': (B, K-1, conv_channels)}."""
+    B_, _, D = x.shape
+    di, nh, hd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,K,Ch)
+    xbc = jax.nn.silu(jnp.sum(conv_in * p["conv_w"], axis=1) + p["conv_b"])
+    new_conv = conv_in[:, 1:]
+    xin, Bv, Cv = jnp.split(xbc, [di, di + g * n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, new_state = ssd_decode_step(
+        xin.reshape(B_, nh, hd), dt, A,
+        Bv.reshape(B_, g, n), Cv.reshape(B_, g, n), cache["state"])
+    y = y + xin.reshape(B_, nh, hd) * p["D"][:, None]
+    y = y.reshape(B_, di).astype(x.dtype)
+    from .layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], \
+        {"state": new_state.astype(cache["state"].dtype), "conv": new_conv}
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    di, nh, hd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, nh, hd, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * g * n), dtype),
+    }

@@ -1,0 +1,113 @@
+"""Batching policies and the Alg. 1 scheduling driver.
+
+Implements the two baseline heuristics the paper compares against
+(TF-Fold depth-based, DyNet agenda-based), the sufficient-condition
+heuristic of §5.3, and the generic driver that turns any frontier-type
+policy into a batch schedule.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Callable, Hashable, Protocol, Sequence
+
+from .graph import Graph, GraphState, TypeId
+
+Schedule = list[tuple[TypeId, list[int]]]
+
+
+class Policy(Protocol):
+    def next_type(self, state: GraphState) -> TypeId: ...
+
+
+def schedule(graph: Graph, policy: Policy) -> Schedule:
+    """Alg. 1: iteratively batch all frontier nodes of policy-chosen type."""
+    state = GraphState(graph)
+    out: Schedule = []
+    while not state.done():
+        t = policy.next_type(state)
+        out.append((t, state.execute_type(t)))
+    return out
+
+
+class AgendaPolicy:
+    """DyNet's agenda-based heuristic: pick the frontier type whose *remaining*
+    nodes have minimal average topological depth (worked example, Fig. 1(c))."""
+
+    def next_type(self, state: GraphState) -> TypeId:
+        def avg_depth(t: TypeId) -> float:
+            return state.remaining_depth_sum[t] / state.remaining_count[t]
+
+        return min(state.frontier_types(), key=lambda t: (avg_depth(t), repr(t)))
+
+
+class SufficientConditionPolicy:
+    """§5.3 heuristic: maximize the Lemma-1 readiness ratio (Eq. 1's second
+    term); ties broken toward larger frontier batch then lexicographic."""
+
+    def next_type(self, state: GraphState) -> TypeId:
+        return max(
+            state.frontier_types(),
+            key=lambda t: (state.readiness_ratio(t), state.frontier_count[t]),
+        )
+
+
+class FSMPolicy:
+    """A learned FSM: state-encoding + Q-table lookup, constant time per step.
+
+    Falls back to the sufficient-condition heuristic on states never seen
+    during training (rare once trained; keeps inference total).
+    """
+
+    def __init__(self, q: dict[Hashable, dict[TypeId, float]], encoder):
+        self.q = q
+        self.encoder = encoder
+        self._fallback = SufficientConditionPolicy()
+
+    def next_type(self, state: GraphState) -> TypeId:
+        s = self.encoder(state)
+        valid = state.frontier_types()
+        qs = self.q.get(s)
+        if qs:
+            scored = [(qs[t], repr(t), t) for t in valid if t in qs]
+            if scored:
+                return max(scored)[2]
+        return self._fallback.next_type(state)
+
+    def transitions(self) -> dict[Hashable, TypeId]:
+        """The FSM itself: state -> chosen type (for inspection/serialization)."""
+        out = {}
+        for s, qs in self.q.items():
+            if qs:
+                out[s] = max(qs.items(), key=lambda kv: (kv[1], repr(kv[0])))[0]
+        return out
+
+
+def depth_schedule(graph: Graph) -> Schedule:
+    """TF-Fold depth-based batching: one batch per (topological depth, type).
+
+    Not frontier-driven — depth groups are executed in depth order, which is
+    always legal since every edge increases depth.
+    """
+    groups: dict[tuple[int, str], list[int]] = defaultdict(list)
+    for node in graph.nodes:
+        groups[(graph.depth[node.id], repr(node.type))].append(node.id)
+    out: Schedule = []
+    for (_, _), ids in sorted(groups.items()):
+        out.append((graph.nodes[ids[0]].type, sorted(ids)))
+    return out
+
+
+def agenda_schedule(graph: Graph) -> Schedule:
+    return schedule(graph, AgendaPolicy())
+
+
+def num_batches(s: Schedule) -> int:
+    return len(s)
+
+
+def best_baseline_schedule(graph: Graph) -> Schedule:
+    """What the paper reports for Vanilla/Cavs DyNet: the better of the
+    agenda-based and depth-based algorithms per workload."""
+    a, d = agenda_schedule(graph), depth_schedule(graph)
+    return a if len(a) <= len(d) else d

@@ -1,0 +1,182 @@
+"""Dynamic-graph batched executor (the DyNet-executor analogue, §4).
+
+Executes a typed dataflow :class:`Graph` whose nodes are cell invocations /
+embedding lookups / output projections, following a batch schedule produced
+by any batching policy. Per-node outputs live in flat stores, one per field
+signature (shape); each batch gathers its inputs by index, runs the node
+type's batched implementation once (one "kernel launch"), and scatters the
+outputs. Schedules are cached per topology (trace-time scheduling — see
+DESIGN.md deviation #2).
+
+Timing is decomposed exactly as the paper's Fig. 8: construction (graph
+building, done by the workload), scheduling (batching analysis), and
+execution (batched op launches).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batching import Policy, Schedule, schedule as make_schedule
+from .graph import Graph, TypeId
+
+
+class NodeImpl:
+    """Batched implementation of one node type.
+
+    ``out_fields``: names/shapes of the node's output fields.
+    ``apply(params, inputs, aux)``: inputs is a list of stacked (k, ...)
+    arrays (one per input slot, gathered from predecessor fields);
+    ``aux`` is a (k,)-int array of per-node static attributes (token ids).
+    Returns dict field -> (k, *shape).
+    """
+
+    def __init__(self, name: str, in_slots: list[tuple[int, str]],
+                 out_fields: dict[str, tuple[int, ...]],
+                 apply: Callable[..., dict[str, jnp.ndarray]]):
+        self.name = name
+        self.in_slots = in_slots          # (pred position, field name)
+        self.out_fields = out_fields
+        self.apply = apply
+
+
+@dataclass
+class ExecStats:
+    n_batches: int = 0
+    n_launches: int = 0
+    schedule_time: float = 0.0
+    exec_time: float = 0.0
+
+
+class ExecResult:
+    """Per-field flat buffers (n_nodes, *shape) plus lazy per-node access."""
+
+    def __init__(self, graph: Graph, impls, bufs: dict):
+        self._graph = graph
+        self._impls = impls
+        self.bufs = bufs
+
+    def node(self, i: int) -> dict[str, jnp.ndarray]:
+        impl = self._impls[self._graph.nodes[i].type]
+        out = {}
+        for f, shape in impl.out_fields.items():
+            out[f] = self.bufs[(f, tuple(shape))][i]
+        return out
+
+    def nodes_with_field(self, fld: str):
+        for n in self._graph.nodes:
+            impl = self._impls.get(n.type)
+            if impl and fld in impl.out_fields:
+                yield n.id
+
+    def field(self, fld: str, ids) -> jnp.ndarray:
+        n0 = self._graph.nodes[ids[0]]
+        shape = tuple(self._impls[n0.type].out_fields[fld])
+        return self.bufs[(fld, shape)][np.asarray(ids)]
+
+
+class DynamicExecutor:
+    def __init__(self, impls: dict[TypeId, NodeImpl], params: Any):
+        self.impls = impls
+        self.params = params
+        self._schedule_cache: dict[tuple, Schedule] = {}
+
+    def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
+            stats: ExecStats | None = None,
+            params: Any = None) -> ExecResult:
+        stats = stats if stats is not None else ExecStats()
+        t0 = time.perf_counter()
+        key = (graph.topology_key(), id(policy))
+        sched = self._schedule_cache.get(key)
+        if sched is None:
+            if callable(policy) and not hasattr(policy, "next_type"):
+                sched = policy(graph)
+            else:
+                sched = make_schedule(graph, policy)
+            self._schedule_cache[key] = sched
+        stats.schedule_time += time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        params = params if params is not None else self.params
+        N = len(graph)
+        # flat per-(field, shape) stores: (n_nodes, *shape) — one gather per
+        # input operand and one scatter per output field per batch.
+        bufs: dict[tuple, jnp.ndarray] = {}
+        nodes = graph.nodes
+        for t, ids in sched:
+            impl = self.impls[t]
+            idx = np.asarray(ids, np.int32)
+            inputs = []
+            for (slot, fld) in impl.in_slots:
+                src = np.asarray([nodes[i].inputs[slot] for i in ids],
+                                 np.int32)
+                pred_t = nodes[nodes[ids[0]].inputs[slot]].type
+                shape = tuple(self.impls[pred_t].out_fields[fld])
+                inputs.append(bufs[(fld, shape)][src])
+            aux = jnp.asarray(np.asarray(
+                [n.attrs.get("aux", 0) for n in (nodes[i] for i in ids)],
+                np.int32))
+            out = impl.apply(params, inputs, aux)
+            for f, shape in impl.out_fields.items():
+                k = (f, tuple(shape))
+                if k not in bufs:
+                    bufs[k] = jnp.zeros((N,) + tuple(shape), out[f].dtype)
+                bufs[k] = bufs[k].at[idx].set(out[f])
+            stats.n_batches += 1
+            stats.n_launches += 1
+        jax.block_until_ready(list(bufs.values()))
+        stats.exec_time += time.perf_counter() - t1
+        return ExecResult(graph, self.impls, bufs)
+
+
+def cell_impl(name: str, compiled_cell, in_slots: list[tuple[int, str]],
+              input_names: list[str], pbuf) -> NodeImpl:
+    """Wrap a CompiledCell as a NodeImpl: cell inputs come from predecessor
+    fields in order; outputs are the cell's outputs."""
+    prog = compiled_cell.prog
+
+    def apply(params, inputs, aux):
+        # Threaded params (training) override the baked buffer; executor
+        # passes a dict {impl_name: pbuf} or None.
+        buf = pbuf
+        if isinstance(params, dict) and name in params:
+            buf = params[name]
+        # Pad the batch to a power-of-two bucket so jit recompiles stay rare.
+        k = inputs[0].shape[0] if inputs else int(aux.shape[0])
+        kp = 1 << (k - 1).bit_length()
+        feed = {}
+        for nm, x in zip(input_names, inputs):
+            if kp != k:
+                pad = [(0, kp - k)] + [(0, 0)] * (x.ndim - 1)
+                x = jnp.pad(x, pad)
+            feed[nm] = x
+        if isinstance(params, dict) and name in params:
+            out = compiled_cell._build_apply()(buf, feed)  # stay traceable
+        else:
+            out = compiled_cell.apply(buf, feed)
+        if kp != k:
+            out = {f: v[:k] for f, v in out.items()}
+        return out
+
+    out_fields = {o: prog.vars[o].shape for o in prog.outputs}
+    return NodeImpl(name, in_slots, out_fields, apply)
+
+
+def embed_impl(name: str, table: jnp.ndarray, field_name: str = "h") -> NodeImpl:
+    def apply(params, inputs, aux):
+        t = params[name] if isinstance(params, dict) and name in params else table
+        return {field_name: t[aux]}
+    return NodeImpl(name, [], {field_name: (table.shape[1],)}, apply)
+
+
+def affine_impl(name: str, w: jnp.ndarray, b: jnp.ndarray,
+                in_field: str = "h", out_field: str = "h") -> NodeImpl:
+    def apply(params, inputs, aux):
+        return {out_field: inputs[0] @ w + b}
+    return NodeImpl(name, [(0, in_field)], {out_field: (w.shape[1],)}, apply)

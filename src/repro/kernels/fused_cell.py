@@ -1,0 +1,89 @@
+"""Fused LSTM cell Pallas kernel.
+
+The PQ-planned layout (§3) makes the four gate weight matrices one
+contiguous (2H, 4H) block — this kernel exploits exactly that: a single MXU
+matmul computes all four gates from one VMEM weight tile, then the gate
+nonlinearities and state update fuse in-register (VPU). This is the
+beyond-paper step: ED-Batch stops at vendor-library granularity (its §6
+notes it cannot fuse); the planned layout is what makes the fusion a plain
+dense matmul.
+
+Grid: (B / bm, H / bn, 2H / bk) with the contraction dimension innermost
+(sequential), accumulating the four gate pre-activations in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cell_kernel(xh_ref, w_ref, b_ref, c_ref, h_out_ref, c_out_ref, acc_ref,
+                 *, block_n: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xh = xh_ref[...]                                  # (bm, bk)
+    w = w_ref[...]                                    # (bk, 4, bn)
+    w = w.reshape(w.shape[0], 4 * block_n)            # 4 gates, contiguous
+    acc_ref[...] += jax.lax.dot_general(
+        xh, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        b = b_ref[...].reshape(1, 4 * block_n).astype(jnp.float32)
+        y = acc_ref[...] + b                          # (bm, 4*bn)
+        i = jax.nn.sigmoid(y[:, 0 * block_n:1 * block_n])
+        f = jax.nn.sigmoid(y[:, 1 * block_n:2 * block_n])
+        g = jnp.tanh(y[:, 2 * block_n:3 * block_n])
+        o = jax.nn.sigmoid(y[:, 3 * block_n:4 * block_n])
+        c_new = f * c_ref[...].astype(jnp.float32) + i * g
+        c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+        h_out_ref[...] = (o * jnp.tanh(c_new)).astype(h_out_ref.dtype)
+
+
+def fused_lstm_cell_kernel(xh, w, b, c, *, block_m: int = 128,
+                           block_n: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """xh: (B, K) concat[x, h]; w: (K, 4H) gate-blocked [i|f|g|o];
+    b: (4H,); c: (B, H) -> (h', c') each (B, H)."""
+    B, K = xh.shape
+    H4 = w.shape[1]
+    H = H4 // 4
+    bm = min(block_m, B)
+    bn = min(block_n, H)
+    bk = min(block_k, K)
+    assert B % bm == 0 and H % bn == 0 and K % bk == 0, (B, H, K, bm, bn, bk)
+    grid = (B // bm, H // bn, K // bk)
+    kernel = functools.partial(_cell_kernel, block_n=bn)
+    # Reshape w to (K, 4, H) column-blocked per gate so a (bk, 4, bn) tile
+    # carries all four gates of the same H range; flatten for the kernel.
+    w4 = w.reshape(K, 4, H)
+    b4 = b.reshape(4, H)
+    h_out, c_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, 4, bn), lambda i, j, k: (k, 0, j)),
+            pl.BlockSpec((4, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((B, H), xh.dtype),
+                   jax.ShapeDtypeStruct((B, H), xh.dtype)],
+        scratch_shapes=[pltpu.VMEM((bm, 4 * bn), jnp.float32)],
+        interpret=interpret,
+    )(xh, w4, b4, c)
+    return h_out, c_out

@@ -1,0 +1,47 @@
+"""Row-gather staging kernel (the memcpy ED-Batch optimizes away).
+
+When an operand is NOT contiguous in memory (unplanned layout, or a batch
+the planner erased), the runtime must stage rows into a contiguous buffer
+before the batched GEMM. On TPU this is a scalar-prefetch gather: the index
+vector is prefetched to SMEM, and each grid step's BlockSpec index_map
+selects the source row — the copy itself is the HBM->VMEM pipeline, with no
+compute wasted. This is the TPU-native analogue of the CUDA gather kernel
+DyNet emits (DESIGN.md, hardware adaptation #2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, src_ref, out_ref):
+    # The index_map already routed the right source row block here.
+    out_ref[...] = src_ref[...]
+
+
+def gather_rows_kernel(src, idx, *, block_d: int = 512,
+                       interpret: bool = False):
+    """src: (N, D); idx: (K,) int32 -> (K, D) == src[idx]."""
+    N, D = src.shape
+    K = idx.shape[0]
+    bd = min(block_d, D)
+    assert D % bd == 0
+    grid = (K, D // bd)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bd), lambda i, j, idx_ref: (idx_ref[i], j)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda i, j, idx_ref: (i, j)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, D), src.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), src)

@@ -1,0 +1,54 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True`` — the
+kernel body runs in Python per grid step, validating correctness against
+ref.py. On TPU (the deployment target) they compile natively; callers flip
+``interpret`` via ``use_interpret_default()``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .flash_attention import flash_attention_kernel
+from .fused_cell import fused_lstm_cell_kernel
+from .gather_batch import gather_rows_kernel
+from .ssd_scan import ssd_scan_pallas
+
+
+def use_interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    interpret = use_interpret_default() if interpret is None else interpret
+    return flash_attention_kernel(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "interpret"))
+def fused_lstm_cell(xh, w, b, c, block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    interpret = use_interpret_default() if interpret is None else interpret
+    return fused_lstm_cell_kernel(xh, w, b, c, block_m=block_m,
+                                  block_n=block_n, block_k=block_k,
+                                  interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gather_rows(src, idx, block_d: int = 512, interpret: bool | None = None):
+    interpret = use_interpret_default() if interpret is None else interpret
+    return gather_rows_kernel(src, idx, block_d=block_d, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "block_h", "interpret"))
+def ssd_scan(x, dt, A, B, C, chunk: int = 128, block_h: int = 8,
+             interpret: bool | None = None):
+    interpret = use_interpret_default() if interpret is None else interpret
+    return ssd_scan_pallas(x, dt, A, B, C, chunk=chunk, block_h=block_h,
+                           interpret=interpret)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (BH, Sq, D); k, v: (BH, Skv, D)."""
+    D = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) * (D ** -0.5)
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w.astype(v.dtype), v)
+
+
+def fused_lstm_cell_ref(xh, w, b, c):
+    """xh: (B, K); w: (K, 4H) gate-blocked [i|f|g|o]; b: (4H,); c: (B, H)."""
+    H = w.shape[1] // 4
+    y = (xh @ w + b).astype(jnp.float32)
+    i = jax.nn.sigmoid(y[:, 0 * H:1 * H])
+    f = jax.nn.sigmoid(y[:, 1 * H:2 * H])
+    g = jnp.tanh(y[:, 2 * H:3 * H])
+    o = jax.nn.sigmoid(y[:, 3 * H:4 * H])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new.astype(xh.dtype), c_new.astype(xh.dtype)
+
+
+def gather_rows_ref(src, idx):
+    return src[idx]
+
+
+def ssd_scan_ref(x, dt, A, B, C):
+    """Naive sequential recurrence. x: (b,l,h,p); dt: (b,l,h); A: (h,);
+    B, C: (b,l,h,n) (heads already expanded)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp
+        dA = jnp.exp(dtt * A)                          # (b, h)
+        state = state * dA[:, :, None, None] + \
+            jnp.einsum("bh,bhn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

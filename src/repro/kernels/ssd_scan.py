@@ -1,0 +1,89 @@
+"""Chunked SSD (Mamba-2) Pallas kernel.
+
+Grid: (batch, head_blocks, chunks) with the chunk dimension innermost and
+sequential; the inter-chunk recurrent state (bh, p, n) is VMEM scratch
+carried across chunk steps. Per chunk the kernel computes the intra-chunk
+masked pseudo-attention (MXU), the carried-state contribution, and the
+state update — one pass over the sequence, no HBM round-trip for the state
+(the TPU-native replacement for the paper's GPU scan, DESIGN.md #2).
+
+Head-minor layout keeps every matmul at (Q, n)x(n, p)-ish MXU shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr,
+                *, block_h: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # (q, bh, p)
+    dt = dt_ref[0].astype(jnp.float32)      # (q, bh)
+    A = a_ref[...].astype(jnp.float32)      # (bh,)
+    B = b_ref[0].astype(jnp.float32)        # (q, bh, n)
+    C = c_ref[0].astype(jnp.float32)        # (q, bh, n)
+
+    dA = dt * A                             # (q, bh), <= 0
+    cum = jnp.cumsum(dA, axis=0)            # (q, bh)
+
+    # intra-chunk: L[h, i, j] = exp(cum_i - cum_j) masked to i >= j
+    li = cum.T[:, :, None]                  # (bh, q, 1)
+    lj = cum.T[:, None, :]                  # (bh, 1, q)
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(mask[None], jnp.exp(li - lj), 0.0)          # (bh, q, q)
+    scores = jnp.einsum("qhn,shn->hqs", C, B) * L             # (bh, q, q)
+    y_diag = jnp.einsum("hqs,sh,shp->qhp", scores, dt, x)
+
+    # carried-state contribution
+    decay_in = jnp.exp(cum)                                   # (q, bh)
+    y_off = jnp.einsum("qhn,hpn->qhp", C * decay_in[:, :, None],
+                       state_scr[...])
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: S <- S * exp(sum dA) + sum_q B_q (dt_q x_q) decay_to_end
+    total = cum[-1]                                           # (bh,)
+    decay_end = jnp.exp(total[None, :] - cum)                 # (q, bh)
+    new_contrib = jnp.einsum("qhn,qh,qh,qhp->hpn", B, decay_end, dt, x)
+    state_scr[...] = state_scr[...] * jnp.exp(total)[:, None, None] \
+        + new_contrib
+
+
+def ssd_scan_pallas(x, dt, A, B, C, *, chunk: int = 128, block_h: int = 8,
+                    interpret: bool = False):
+    """x: (b, l, h, p); dt: (b, l, h); A: (h,); B, C: (b, l, h, n)
+    (groups already broadcast to heads) -> y: (b, l, h, p)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, l)
+    bh = min(block_h, h)
+    assert l % chunk == 0 and h % bh == 0, (l, chunk, h, bh)
+    grid = (b, h // bh, l // chunk)
+    kernel = functools.partial(_ssd_kernel, block_h=bh, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bh, p), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, chunk, bh), lambda i, j, k: (i, k, j)),
+            pl.BlockSpec((bh,), lambda i, j, k: (j,)),
+            pl.BlockSpec((1, chunk, bh, n), lambda i, j, k: (i, k, j, 0)),
+            pl.BlockSpec((1, chunk, bh, n), lambda i, j, k: (i, k, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bh, p), lambda i, j, k: (i, k, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bh, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)

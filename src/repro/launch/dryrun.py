@@ -1,0 +1,371 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh, with memory and cost analysis captured for the roofline.
+
+MUST be imported before any other jax-touching module — the XLA_FLAGS line
+above runs first and gives this process 512 host devices (placeholders for
+the 2x16x16 production mesh). Do not set that flag globally: smoke tests and
+benchmarks should see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out r.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.arch.model import TransformerLM
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (Roofline, collective_bytes, model_flops)
+from repro.launch.sharding import Partitioner
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+SLIDING_WINDOW_500K = 8192  # sub-quadratic variant for full-attention archs
+
+
+def resolve_config(arch: str, shape: str):
+    cfg = get_config(arch)
+    note = ""
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        cfg = cfg.with_sliding_window(SLIDING_WINDOW_500K)
+        note = f"(SW{SLIDING_WINDOW_500K})"
+    return cfg, note
+
+
+def input_specs(arch: str, shape: str, model: TransformerLM,
+                part: Partitioner):
+    """ShapeDtypeStruct stand-ins + shardings for every model input."""
+    cfg = model.cfg
+    info = SHAPES[shape]
+    B, S = info["batch"], info["seq"]
+    i32 = jnp.int32
+    tok_sharding = part.named(part.token_spec(B))
+    if info["kind"] == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        shardings = {"tokens": tok_sharding, "labels": tok_sharding}
+        if cfg.n_image_tokens:
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), model.dtype)
+            shardings["image_embeds"] = part.named(
+                P(part.batch_spec(B) or None, None, None))
+        return specs, shardings
+    if info["kind"] == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        shardings = {"tokens": tok_sharding}
+        if cfg.n_image_tokens:
+            specs["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), model.dtype)
+            shardings["image_embeds"] = part.named(
+                P(part.batch_spec(B) or None, None, None))
+        return specs, shardings
+    # decode
+    cache_spec_tree = model.cache_specs(B, S)
+    cache_shardings = part.to_shardings(
+        part.cache_specs(cache_spec_tree, B))
+    specs = {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "caches": cache_spec_tree,
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+    shardings = {
+        "token": part.named(P(part.batch_spec(B) or None)),
+        "caches": cache_shardings,
+        "pos": part.named(P()),
+    }
+    return specs, shardings
+
+
+def build_step(arch: str, shape: str, model: TransformerLM,
+               part: Partitioner, with_opt: bool = True):
+    """Returns (fn, arg_specs, arg_shardings, out_shardings?)."""
+    cfg = model.cfg
+    kind = SHAPES[shape]["kind"]
+    param_spec_tree = model.param_specs()
+    param_shardings = part.param_shardings(param_spec_tree)
+    in_specs, in_shardings = input_specs(arch, shape, model, part)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig()
+        opt_spec_tree = jax.eval_shape(init_opt_state, param_spec_tree)
+        opt_shardings = part.to_shardings(part.opt_specs(param_spec_tree))
+        accum = getattr(model, "grad_accum", 1)
+
+        def train_step(params, opt_state, batch):
+            if accum > 1:
+                def micro(carry, mb):
+                    gsum, lsum = carry
+                    loss, g = jax.value_and_grad(model.loss)(params, mb)
+                    return (jax.tree.map(jnp.add, gsum, g), lsum + loss), None
+
+                mbs = jax.tree.map(
+                    lambda a: a.reshape((accum, a.shape[0] // accum)
+                                        + a.shape[1:]), batch)
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (gsum, lsum), _ = jax.lax.scan(micro, (zero, 0.0), mbs)
+                grads = jax.tree.map(lambda g: (g / accum).astype(jnp.bfloat16),
+                                     gsum)
+                loss = lsum / accum
+            else:
+                loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt_state, m = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+            return params, opt_state, loss
+
+        args = (param_spec_tree, opt_spec_tree, in_specs)
+        shardings = (param_shardings, opt_shardings, in_shardings)
+        return train_step, args, shardings, (param_shardings, opt_shardings,
+                                             part.named(P()))
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 batch.get("image_embeds"))
+
+        args = (param_spec_tree, in_specs)
+        shardings = (param_shardings, in_shardings)
+        return prefill_step, args, shardings, None
+
+    def serve_step(params, token, caches, pos):
+        return model.decode_step(params, token, caches, pos)
+
+    args = (param_spec_tree, in_specs["token"], in_specs["caches"],
+            in_specs["pos"])
+    shardings = (param_shardings, in_shardings["token"],
+                 in_shardings["caches"], in_shardings["pos"])
+    return serve_step, args, shardings, None
+
+
+def block_cost(model: TransformerLM, part: Partitioner, shape: str,
+               batch: int, seq: int):
+    """Compile ONE pattern-group repeat as its own SPMD program and return
+    (flops, bytes, collective_bytes). XLA cost analysis counts a while-loop
+    body once, so the full scan program under-reports by ~n_repeats x; the
+    roofline adds (R-1) x this block's cost (fwd+bwd for training)."""
+    cfg = model.cfg
+    kind = SHAPES[shape]["kind"]
+    blocks_spec = model.param_specs()["blocks"]
+    one = tuple(jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), b)
+        for b in blocks_spec)
+    one_shardings = tuple(part.to_shardings(part.block_specs(b)) for b in one)
+    S_ = 1 if kind == "decode" else seq
+    x_spec = jax.ShapeDtypeStruct((batch, S_, cfg.d_model), model.dtype)
+    seq_ax = ("model" if part.seq_parallel and S_ % part.model_size == 0
+              else None)
+    x_sharding = part.named(
+        jax.sharding.PartitionSpec(part.batch_spec(batch) or None, seq_ax,
+                                   None))
+    positions = jnp.zeros((1, 1), jnp.int32)  # closed-over constants
+    import repro.arch.layers as L
+
+    if kind == "decode":
+        cache_full = model.cache_specs(batch, seq)
+        cache_one = tuple(jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), c)
+            for c in cache_full)
+        cache_shardings = part.to_shardings(part.cache_specs(cache_full, batch))
+        cache_one_shardings = tuple(jax.tree.map(
+            lambda ns: part.named(
+                jax.sharding.PartitionSpec(*ns.spec[1:])), cs)
+            for cs, c in zip(cache_shardings, cache_one))
+
+        def fn(lps_tuple, caches, x):
+            pos = jnp.int32(seq - 1)
+            for pi, spec in enumerate(cfg.pattern):
+                x, _ = model._decode_layer(x, lps_tuple[pi], caches[pi],
+                                           spec, pos)
+            return x
+
+        args = (one, cache_one, x_spec)
+        shardings = (one_shardings, cache_one_shardings, x_sharding)
+    else:
+        pos_arr = jnp.arange(S_)[None]
+
+        def apply_once(lps_tuple, x):
+            mask = L.causal_mask(S_, cfg.sliding_window)
+            positions_b = jnp.broadcast_to(pos_arr, (batch, S_))
+            for pi, spec in enumerate(cfg.pattern):
+                x, _ = model._apply_layer(x, lps_tuple[pi], spec,
+                                          positions_b, mask, None)
+            return x
+
+        if kind == "train":
+            def fn(lps_tuple, x):
+                def scalar(lps, xx):
+                    out = jax.checkpoint(apply_once)(lps, xx)  # match remat
+                    return jnp.sum(out.astype(jnp.float32))
+                g = jax.grad(scalar, argnums=(0, 1))(lps_tuple, x)
+                return g
+        else:
+            fn = apply_once
+        args = (one, x_spec)
+        shardings = (one_shardings, x_sharding)
+
+    jb = jax.jit(fn, in_shardings=shardings)
+    lowered = jb.lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def dryrun_one(arch: str, shape: str, *, multi_pod: bool = False,
+               verbose: bool = True, with_block_cost: bool = True,
+               seq_parallel: bool = False, layer_remat: bool = False,
+               fsdp: bool = False, grad_accum: int = 1,
+               no_tp: bool = False) -> dict:
+    t0 = time.time()
+    cfg, note = resolve_config(arch, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    part = Partitioner(mesh, cfg, seq_parallel=seq_parallel, fsdp=fsdp)
+    part.no_tp = no_tp
+    model = TransformerLM(cfg, dtype=jnp.bfloat16,
+                          remat=SHAPES[shape]["kind"] == "train")
+    model.layer_remat = layer_remat
+    model.grad_accum = grad_accum
+    model.partitioner = part
+    variant = ("+sp" if seq_parallel else "") + \
+        ("+lremat" if layer_remat else "") + ("+fsdp" if fsdp else "") + \
+        (f"+ga{grad_accum}" if grad_accum > 1 else "") + \
+        ("+notp" if no_tp else "")
+    note = note + variant
+    fn, arg_specs, arg_shardings, out_shardings = build_step(
+        arch, shape, model, part)
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=arg_shardings,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(*arg_specs)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        info = SHAPES[shape]
+        flops = float(cost.get("flops", 0.0))
+        nbytes = float(cost.get("bytes accessed", 0.0))
+        # correct for the scanned repeats (single-pod roofline runs only)
+        if with_block_cost and not multi_pod:
+            bf, bb, bc = block_cost(model, part, shape, info["batch"],
+                                    info["seq"])
+            R = cfg.n_repeats
+            flops += bf * (R - 1)
+            nbytes += bb * (R - 1)
+            coll = {k: coll.get(k, 0) + bc.get(k, 0) * (R - 1)
+                    for k in set(coll) | set(bc)}
+    tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+    chips = int(np.prod(list(mesh.devices.shape)))
+    rl = Roofline(
+        arch=arch, shape=shape + note,
+        mesh="x".join(map(str, mesh.devices.shape)), chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=nbytes,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown={k: v for k, v in coll.items() if v},
+        model_flops=model_flops(cfg, model.param_specs(), shape, tokens),
+        bytes_per_device=float(getattr(mem, "temp_size_in_bytes", 0)
+                               + getattr(mem, "argument_size_in_bytes", 0)),
+    )
+    row = rl.row()
+    row.update({
+        "ok": True,
+        "compile_s": round(time.time() - t0, 1),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape}{note} on {row['mesh']}: OK "
+              f"compute {rl.t_compute*1e3:.2f}ms memory {rl.t_memory*1e3:.2f}ms "
+              f"collective {rl.t_collective*1e3:.2f}ms -> {rl.dominant}-bound; "
+              f"useful {rl.useful_ratio:.2f}; "
+              f"temp/dev {row['temp_bytes'] and row['temp_bytes']/2**30:.2f}GiB "
+              f"({row['compile_s']}s compile)", flush=True)
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel residuals (perf variant)")
+    ap.add_argument("--layer-remat", action="store_true",
+                    help="nested per-layer remat (perf variant)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="ZeRO-3 parameter sharding over data (perf variant)")
+    ap.add_argument("--grad-accum", type=int, default=1,
+                    help="microbatch gradient accumulation (perf variant)")
+    ap.add_argument("--no-tp", action="store_true",
+                    help="replicate params; model axis = seq-data parallel")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ARCHS for s in SHAPES]
+    elif args.arch and args.shape:
+        combos = [(args.arch, args.shape)]
+    else:
+        ap.error("need --all or both --arch and --shape")
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    rows = []
+    failures = 0
+    for arch, shape in combos:
+        for mp in meshes:
+            try:
+                rows.append(dryrun_one(arch, shape, multi_pod=mp,
+                                       seq_parallel=args.seq_parallel,
+                                       layer_remat=args.layer_remat,
+                                       fsdp=args.fsdp,
+                                       grad_accum=args.grad_accum,
+                                       no_tp=args.no_tp))
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures += 1
+                traceback.print_exc()
+                rows.append({"arch": arch, "shape": shape,
+                             "mesh": "2x16x16" if mp else "16x16",
+                             "ok": False, "error": str(e)[:500]})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+        print(f"wrote {args.out} ({len(rows)} rows, {failures} failures)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

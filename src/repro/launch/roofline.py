@@ -1,0 +1,160 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * 197e12)        [bf16 MXU peak]
+    memory     = HLO_bytes / (chips * 819e9)          [HBM bandwidth]
+    collective = collective_bytes / (chips * 50e9)    [per-link ICI]
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-program,
+all chips). collective_bytes is not in cost_analysis — we parse the
+optimized HLO and sum the *output* shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (shapes in
+SPMD HLO are already per-device). MODEL_FLOPS uses 6·N_active·tokens for
+training and 2·N_active·tokens for single-position inference.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip, TPU v5e-class
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind output bytes summed over the program (one device's
+    view; SPMD shapes are per-device). '-done' ops are skipped so async
+    start/done pairs count once."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in m.group(0):
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict = field(default_factory=dict)
+    model_flops: float = 0.0
+    bytes_per_device: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        # cost_analysis reports the per-device SPMD program: no chip division
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        # coll_bytes is per-device already (SPMD program view)
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "model_flops": self.model_flops, "hlo_flops": self.hlo_flops,
+            "useful_ratio": self.useful_ratio,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def count_params(spec_tree) -> int:
+    import jax
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(spec_tree))
+
+
+def count_active_params(spec_tree, cfg) -> int:
+    """Total minus the inactive expert fraction (6·N_active·D convention)."""
+    import jax
+
+    total = 0
+    expert = 0
+
+    def walk(tree):
+        nonlocal total, expert
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if k in ("w_gate", "w_up", "w_down") and hasattr(v, "shape") \
+                        and len(v.shape) >= 4:
+                    expert += int(np.prod(v.shape))
+                    total += int(np.prod(v.shape))
+                else:
+                    walk(v)
+        elif isinstance(tree, (tuple, list)):
+            for v in tree:
+                walk(v)
+        elif hasattr(tree, "shape"):
+            total += int(np.prod(tree.shape))
+
+    walk(spec_tree)
+    if cfg.n_experts:
+        frac = cfg.experts_per_token / cfg.n_experts
+        return int(total - expert * (1 - frac))
+    return total
+
+
+def model_flops(cfg, spec_tree, shape_name: str, tokens: int) -> float:
+    n_active = count_active_params(spec_tree, cfg)
+    if shape_name.startswith("train"):
+        return 6.0 * n_active * tokens
+    return 2.0 * n_active * tokens

@@ -1,0 +1,58 @@
+"""Training launcher.
+
+Reduced-scale runs execute on this host's devices; full-scale configs are
+for the production mesh (use dryrun.py to validate lowering first).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+        --steps 200 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.arch.model import TransformerLM
+from repro.configs import ARCHS, get_config
+from repro.data.pipeline import PipelineConfig, SyntheticCorpus
+from repro.train.checkpoint import save_checkpoint
+from repro.train.loop import train
+from repro.train.optimizer import AdamWConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer small-width family variant (CPU-friendly)")
+    ap.add_argument("--d-model", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default="")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(d_model=args.d_model)
+    model = TransformerLM(cfg)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    pipe = SyntheticCorpus(PipelineConfig(
+        vocab=cfg.vocab, seq_len=args.seq, batch_size=args.batch,
+        seed=args.seed, n_image_tokens=cfg.n_image_tokens,
+        d_model=cfg.d_model))
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps)
+    state = train(model, params, iter(pipe), args.steps, opt)
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, state.params, state.opt, state.step,
+                        {"arch": cfg.name})
+        print(f"saved {args.checkpoint}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Registry of the paper's 8 workloads (Table 1)."""
+
+from __future__ import annotations
+
+from .chains import BiLSTMTagger, LSTMNMT
+from .lattices import LatticeGRU, LatticeLSTM
+from .trees import TreeWorkload
+
+
+def make_workload(name: str, model_size: int = 64, seed: int = 0,
+                  layout: str = "planned"):
+    if name == "BiLSTM-Tagger":
+        return BiLSTMTagger(model_size, seed, layout)
+    if name == "LSTM-NMT":
+        return LSTMNMT(model_size, seed, layout)
+    if name in ("TreeLSTM", "TreeGRU", "MV-RNN", "TreeLSTM-2Type"):
+        return TreeWorkload(name, model_size, seed, layout)
+    if name == "LatticeLSTM":
+        return LatticeLSTM(model_size, seed, layout)
+    if name == "LatticeGRU":
+        return LatticeGRU(model_size, seed, layout)
+    raise ValueError(name)
+
+
+WORKLOADS = ["BiLSTM-Tagger", "LSTM-NMT", "TreeLSTM", "TreeGRU", "MV-RNN",
+             "TreeLSTM-2Type", "LatticeLSTM", "LatticeGRU"]
+CHAIN_WORKLOADS = ["BiLSTM-Tagger", "LSTM-NMT"]
+TREE_WORKLOADS = ["TreeLSTM", "TreeGRU", "MV-RNN", "TreeLSTM-2Type"]
+LATTICE_WORKLOADS = ["LatticeLSTM", "LatticeGRU"]

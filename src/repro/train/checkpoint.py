@@ -1,0 +1,60 @@
+"""Flat-npz checkpointing for arbitrary param/optimizer pytrees."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    meta: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten({"params": params})
+    if opt_state is not None:
+        flat.update(_flatten({"opt": opt_state}))
+    np.savez(path, __step__=np.int64(step),
+             __meta__=np.frombuffer(
+                 json.dumps(meta or {}).encode(), dtype=np.uint8),
+             **flat)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    """Restores into the template's structure/dtypes. Returns
+    (params, opt_state or None, step, meta)."""
+    with np.load(path) as z:
+        step = int(z["__step__"])
+        meta = json.loads(bytes(z["__meta__"]).decode()) if "__meta__" in z else {}
+
+        def rebuild(template, prefix):
+            if isinstance(template, dict):
+                return {k: rebuild(v, f"{prefix}{k}/")
+                        for k, v in template.items()}
+            if isinstance(template, tuple):
+                return tuple(rebuild(v, f"{prefix}{i}/")
+                             for i, v in enumerate(template))
+            if isinstance(template, list):
+                return [rebuild(v, f"{prefix}{i}/")
+                        for i, v in enumerate(template)]
+            arr = z[prefix[:-1]]
+            return jnp.asarray(arr, getattr(template, "dtype", arr.dtype))
+
+        params = rebuild(params_template, "params/")
+        opt = rebuild(opt_template, "opt/") if opt_template is not None else None
+    return params, opt, step, meta

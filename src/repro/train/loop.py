@@ -1,0 +1,51 @@
+"""Training loop: jitted AdamW step over any TransformerLM config."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.arch.model import TransformerLM
+from .optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+@dataclass
+class TrainState:
+    params: object
+    opt: object
+    step: int = 0
+    history: list = field(default_factory=list)
+
+
+def make_train_step(model: TransformerLM, opt_cfg: AdamWConfig):
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, m = adamw_update(opt_cfg, params, grads, opt_state)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    return jax.jit(step)
+
+
+def train(model: TransformerLM, params, data_iter, steps: int,
+          opt_cfg: AdamWConfig | None = None, log_every: int = 10,
+          log_fn=print) -> TrainState:
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps)
+    state = TrainState(params=params, opt=init_opt_state(params))
+    step_fn = make_train_step(model, opt_cfg)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = next(data_iter)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state.params, state.opt, m = step_fn(state.params, state.opt, batch)
+        state.step = i + 1
+        if (i + 1) % log_every == 0 or i == 0:
+            loss = float(m["loss"])
+            state.history.append(loss)
+            log_fn(f"step {i + 1:5d} loss {loss:.4f} "
+                   f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.2f} "
+                   f"({(time.perf_counter() - t0) / (i + 1):.2f}s/step)")
+    return state

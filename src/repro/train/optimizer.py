@@ -1,0 +1,74 @@
+"""AdamW + cosine LR schedule, pure JAX (no optax dependency)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.lr * (cfg.min_lr_ratio
+                    + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> dict[str, Any]:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return {"mu": zeros,
+            "nu": jax.tree.map(jnp.zeros_like, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = lr_at(cfg, step)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu2 = cfg.b1 * mu + (1 - cfg.b1) * g32
+        nu2 = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g32)
+        mhat = mu2 / (1 - cfg.b1 ** step)
+        nhat = nu2 / (1 - cfg.b2 ** step)
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p - lr * delta.astype(p.dtype)).astype(p.dtype), mu2, nu2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_state = {"mu": treedef.unflatten([o[1] for o in out]),
+                 "nu": treedef.unflatten([o[2] for o in out]),
+                 "step": step}
+    return new_p, new_state, {"lr": lr, "grad_norm": gnorm}

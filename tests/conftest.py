@@ -1,0 +1,46 @@
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph, Node
+
+
+@pytest.fixture
+def rng():
+    return random.Random(0)
+
+
+@pytest.fixture
+def nprng():
+    return np.random.default_rng(0)
+
+
+def build_fig1_tree(n_leaves: int = 4) -> Graph:
+    """The paper's Fig. 1(a): left-leaning chain of internal nodes over
+    n_leaves leaves, each node with an output head."""
+    nodes = []
+
+    def add(type_, inputs=()):
+        nodes.append(Node(id=len(nodes), type=type_, inputs=tuple(inputs)))
+        return len(nodes) - 1
+
+    leaves = [add("L") for _ in range(n_leaves)]
+    cur = leaves[0]
+    internals = []
+    for l in leaves[1:]:
+        cur = add("I", (cur, l))
+        internals.append(cur)
+    for v in leaves + internals:
+        add("O", (v,))
+    return Graph(nodes)
+
+
+def random_dag(rand: random.Random, n: int, n_types: int) -> Graph:
+    nodes = []
+    for i in range(n):
+        k = rand.randint(0, min(2, i))
+        inputs = tuple(sorted(rand.sample(range(i), k))) if k else ()
+        nodes.append(Node(id=i, type=f"t{rand.randrange(n_types)}",
+                          inputs=inputs))
+    return Graph(nodes)

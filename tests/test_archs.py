@@ -1,0 +1,184 @@
+"""Per-architecture smoke tests (reduced configs) + MoE/SSM properties."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.arch.config import ArchConfig, LayerSpec
+from repro.arch import layers as L
+from repro.arch.model import TransformerLM
+from repro.configs import ARCHS, get_config
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_smoke_forward_and_train_step(name, key):
+    """Spec requirement: reduced variant, one forward + one train step on
+    CPU, output shapes + no NaNs."""
+    cfg = get_config(name).reduced()
+    assert cfg.d_model <= 512 and (not cfg.n_experts or cfg.n_experts <= 4)
+    m = TransformerLM(cfg)
+    params = m.init_params(key)
+    B, S = 2, 32
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    img = (jax.random.normal(key, (B, cfg.n_image_tokens, cfg.d_model))
+           if cfg.n_image_tokens else None)
+    logits, aux = m.forward(params, tokens, img)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    batch = {"tokens": tokens, "labels": tokens}
+    if img is not None:
+        batch["image_embeds"] = img
+    loss, grads = jax.value_and_grad(m.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    for g in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(g)).all()
+
+
+@pytest.mark.parametrize("name", ["qwen2-0.5b", "mamba2-130m",
+                                  "jamba-v0.1-52b", "olmoe-1b-7b",
+                                  "llama-3.2-vision-11b"])
+def test_decode_matches_forward(name, key):
+    cfg = dataclasses.replace(get_config(name).reduced(),
+                              capacity_factor=8.0)
+    m = TransformerLM(cfg)
+    params = m.init_params(key)
+    B, S = 2, 16
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    img = (jax.random.normal(key, (B, cfg.n_image_tokens, cfg.d_model))
+           if cfg.n_image_tokens else None)
+    logits_full, _ = m.forward(params, tokens, img)
+    caches = m.init_cache(B, S)
+    if cfg.n_image_tokens:
+        new_caches = []
+        for pi, spec in enumerate(cfg.pattern):
+            c = caches[pi]
+            if spec.mixer == "cross_attn":
+                lp = params["blocks"][pi]
+
+                def proj(a):
+                    return (L._split_heads(img @ a["wk"], cfg.n_kv_heads,
+                                           cfg.d_head),
+                            L._split_heads(img @ a["wv"], cfg.n_kv_heads,
+                                           cfg.d_head))
+
+                ks, vs = jax.vmap(proj)(lp["attn"])
+                c = {"k": ks, "v": vs}
+            new_caches.append(c)
+        caches = tuple(new_caches)
+    outs = []
+    for t in range(S):
+        lg, caches = m.decode_step(params, tokens[:, t], caches, t)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec - logits_full)))
+    assert err < 5e-3, err
+
+
+def test_prefill_then_decode_continues(key):
+    cfg = get_config("qwen2-0.5b").reduced()
+    m = TransformerLM(cfg)
+    params = m.init_params(key)
+    B, S, extra = 2, 12, 4
+    tokens = jax.random.randint(key, (B, S + extra), 0, cfg.vocab)
+    logits_full, _ = m.forward(params, tokens)
+    lg, caches = m.prefill(params, tokens[:, :S], cache_len=S + extra)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(logits_full[:, S - 1]),
+                               rtol=2e-3, atol=2e-3)
+    for t in range(S, S + extra):
+        lg, caches = m.decode_step(params, tokens[:, t], caches, t)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits_full[:, t]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_attention_masks_far_context(key):
+    """With window W, logits for position t must not depend on tokens
+    earlier than t - W + 1."""
+    cfg = get_config("qwen2-0.5b").reduced().with_sliding_window(4)
+    m = TransformerLM(cfg)
+    params = m.init_params(key)
+    B, S = 1, 16
+    t1 = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    t2 = t1.at[:, 0:4].set((t1[:, 0:4] + 7) % cfg.vocab)  # mutate far past
+    l1, _ = m.forward(params, t1)
+    l2, _ = m.forward(params, t2)
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+    # sanity: mutating near context does change the last logits
+    t3 = t1.at[:, -2].set((t1[:, -2] + 7) % cfg.vocab)
+    l3, _ = m.forward(params, t3)
+    assert float(jnp.max(jnp.abs(l3[:, -1] - l1[:, -1]))) > 1e-4
+
+
+# --------------------------------------------------------------------------
+# MoE properties
+# --------------------------------------------------------------------------
+
+
+def _moe_cfg(E, K, cf=8.0):
+    return ArchConfig(name="t", family="moe", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=4, d_ff=0, vocab=64,
+                      n_experts=E, experts_per_token=K, d_ff_expert=64,
+                      capacity_factor=cf,
+                      pattern=(LayerSpec("attn", "moe"),))
+
+
+def _moe_dense_ref(p, x, cfg):
+    """Dense per-token expert loop (no capacity, no sorting)."""
+    logits = (x @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, cfg.experts_per_token)
+    gate = gate / gate.sum(-1, keepdims=True)
+    y = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        h = jax.nn.silu(x @ p["w_gate"][e]) * (x @ p["w_up"][e])
+        ye = h @ p["w_down"][e]
+        w = jnp.sum(jnp.where(idx == e, gate, 0.0), axis=-1)
+        y = y + ye * w[:, None].astype(x.dtype)
+    return y
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), E=st.sampled_from([2, 4]),
+       K=st.integers(1, 2))
+def test_moe_sorted_dispatch_matches_dense(seed, E, K):
+    """With ample capacity, sorted contiguous dispatch == dense reference."""
+    cfg = _moe_cfg(E, K, cf=float(E))
+    key = jax.random.PRNGKey(seed)
+    p = L.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (24, cfg.d_model))
+    y, aux = L.moe(p, x, cfg)
+    y_ref = _moe_dense_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_capacity_drops_are_bounded(key):
+    """At capacity factor 1.0 the kept assignment count per expert is <= C."""
+    cfg = _moe_cfg(4, 2, cf=1.0)
+    p = L.init_moe(key, cfg)
+    x = jax.random.normal(key, (64, cfg.d_model))
+    y, _ = L.moe(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_moe_aux_loss_uniform_is_one(key):
+    """Perfectly uniform routing gives aux loss ~= 1 (switch normalization)."""
+    cfg = _moe_cfg(4, 1, cf=8.0)
+    p = L.init_moe(key, cfg)
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform router
+    x = jax.random.normal(key, (256, cfg.d_model))
+    _, aux = L.moe(p, x, cfg)
+    assert abs(float(aux) - 1.0) < 0.3

@@ -1,0 +1,104 @@
+"""Batching algorithms vs the paper's own worked example (Fig. 1/2) and
+property tests over random DAGs."""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import build_fig1_tree, random_dag
+from repro.core.batching import (AgendaPolicy, SufficientConditionPolicy,
+                                 agenda_schedule, best_baseline_schedule,
+                                 depth_schedule, schedule)
+from repro.core.graph import Graph, GraphState, validate_schedule
+from repro.core.rl import RLConfig, train_fsm
+
+
+class TestFig1Example:
+    """Exact batch counts from the paper's §2.1 walkthrough."""
+
+    def test_depth_based_splits_output_nodes(self):
+        g = build_fig1_tree(4)
+        sched = depth_schedule(g)
+        validate_schedule(g, sched)
+        # L, then (I,O) per depth 1..3, then final O: 8 batches;
+        # O appears in 4 separate batches as the paper describes.
+        assert len(sched) == 8
+        assert sum(1 for t, _ in sched if t == "O") == 4
+
+    def test_agenda_takes_extra_batch(self):
+        g = build_fig1_tree(4)
+        sched = agenda_schedule(g)
+        validate_schedule(g, sched)
+        assert len(sched) == 6  # L, O(4), I, I, I, O(3) — Fig. 1(c)
+
+    def test_sufficient_condition_is_optimal(self):
+        g = build_fig1_tree(4)
+        sched = schedule(g, SufficientConditionPolicy())
+        validate_schedule(g, sched)
+        assert len(sched) == g.batch_lower_bound() == 5
+        # one single batch of all 7 O nodes
+        o_batches = [ids for t, ids in sched if t == "O"]
+        assert len(o_batches) == 1 and len(o_batches[0]) == 7
+
+    def test_readiness_ratio_matches_paper_walkthrough(self):
+        """Iteration 2 of Fig. 2(b): ratio 5/7 for O, 1/1 for I."""
+        g = build_fig1_tree(4)
+        state = GraphState(g)
+        state.execute_type("L")
+        state.execute_type("I")
+        assert state.readiness_ratio("O") == pytest.approx(5 / 7)
+        assert state.readiness_ratio("I") == pytest.approx(1.0)
+
+    def test_fsm_learns_optimal(self):
+        g = build_fig1_tree(4)
+        res = train_fsm([g], RLConfig(max_iters=500))
+        sched = schedule(g, res.policy)
+        validate_schedule(g, sched)
+        assert len(sched) == 5
+        assert res.reached_lower_bound
+
+    def test_fsm_generalizes_across_sizes(self):
+        """An FSM trained on small trees schedules bigger ones optimally
+        (the paper's generalization claim, §2.2)."""
+        res = train_fsm([build_fig1_tree(n) for n in (3, 4)],
+                        RLConfig(max_iters=500))
+        big = build_fig1_tree(12)
+        sched = schedule(big, res.policy)
+        validate_schedule(big, sched)
+        assert len(sched) == big.batch_lower_bound()
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 40), t=st.integers(1, 4))
+def test_policies_produce_valid_complete_schedules(seed, n, t):
+    g = random_dag(random.Random(seed), n, t)
+    for sched in (depth_schedule(g), agenda_schedule(g),
+                  schedule(g, SufficientConditionPolicy())):
+        validate_schedule(g, sched)
+        assert len(sched) >= g.batch_lower_bound()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fsm_policy_always_valid_on_random_dags(seed):
+    """On *unstructured* random DAGs the FSM has no regularity to exploit
+    (App. A.4) and may lose to the heuristics — quality is asserted on the
+    structured workloads instead. Here: the learned policy must always
+    yield a valid, complete schedule bounded below by App. A.3."""
+    rand = random.Random(seed)
+    g = random_dag(rand, 30, 3)
+    res = train_fsm([g], RLConfig(max_iters=200, check_every=25))
+    sched = schedule(g, res.policy)
+    validate_schedule(g, sched)
+    assert len(sched) >= g.batch_lower_bound()
+    assert len(best_baseline_schedule(g)) >= g.batch_lower_bound()
+
+
+def test_lower_bound_is_a_lower_bound():
+    for seed in range(30):
+        g = random_dag(random.Random(seed), 25, 3)
+        lb = g.batch_lower_bound()
+        assert len(schedule(g, SufficientConditionPolicy())) >= lb
+        assert len(depth_schedule(g)) >= lb

@@ -1,0 +1,78 @@
+"""State-encoding variants (§2.3, §5.3) and the App. A.4 failure case."""
+
+import random
+
+from conftest import build_fig1_tree
+from repro.core.batching import schedule
+from repro.core.encodings import ENCODERS, e_base, e_max, e_sort, e_sort_phase
+from repro.core.graph import Graph, GraphState, Node, validate_schedule
+from repro.core.rl import RLConfig, train_fsm
+
+
+def test_encodings_are_hashable_and_distinct():
+    g = build_fig1_tree(4)
+    st = GraphState(g)
+    states = {name: enc(st) for name, enc in ENCODERS.items()}
+    for v in states.values():
+        hash(v)
+    # base is a set; sort is an ordered tuple — they differ by design
+    assert states["base"] == frozenset({"L"})
+    assert states["sort"] == ("L",)
+
+
+def test_all_encodings_learn_the_tree_optimum():
+    """§5.3: on tree-based models every encoding reaches the optimum; E_sort
+    is the paper's default."""
+    g = build_fig1_tree(6)
+    for name in ("base", "max", "sort"):
+        res = train_fsm([g], RLConfig(max_iters=600, encoding=name, seed=1))
+        sched = schedule(g, res.policy)
+        validate_schedule(g, sched)
+        assert len(sched) == g.batch_lower_bound(), name
+
+
+def _two_phase_graph(n: int = 4) -> Graph:
+    """App. A.4 / Fig. 10: two chained tree networks where the second swaps
+    the roles of I and O — the frontier-set state aliases across phases."""
+    nodes = []
+
+    def add(t, inputs=()):
+        nodes.append(Node(id=len(nodes), type=t, inputs=tuple(inputs)))
+        return len(nodes) - 1
+
+    # phase 1: chain of I with O outputs hanging off
+    leaves = [add("L") for _ in range(n)]
+    cur = leaves[0]
+    members = list(leaves)
+    for l in leaves[1:]:
+        cur = add("I", (cur, l))
+        members.append(cur)
+    for v in members:
+        add("O", (v,))
+    # phase 2 rooted at phase-1 root: same topology, I and O swapped
+    leaves2 = [add("L", (cur,)) for _ in range(n)]
+    cur2 = leaves2[0]
+    members2 = list(leaves2)
+    for l in leaves2[1:]:
+        cur2 = add("O", (cur2, l))
+        members2.append(cur2)
+    for v in members2:
+        add("I", (v,))
+    return Graph(nodes)
+
+
+def test_phase_encoding_handles_app_a4_case():
+    """The same frontier state must pick I in phase 1 but O in phase 2:
+    memoryless e_sort cannot; the phase-augmented encoding can."""
+    g = _two_phase_graph(5)
+    lb = g.batch_lower_bound()
+    res_plain = train_fsm([g], RLConfig(max_iters=1500, encoding="sort",
+                                        seed=3))
+    res_phase = train_fsm([g], RLConfig(max_iters=1500,
+                                        encoding="sort_phase", seed=3))
+    n_plain = len(schedule(g, res_plain.policy))
+    n_phase = len(schedule(g, res_phase.policy))
+    validate_schedule(g, schedule(g, res_phase.policy))
+    # phase info must not hurt, and should strictly help when plain aliases
+    assert n_phase <= n_plain
+    assert n_phase >= lb

@@ -1,0 +1,81 @@
+"""Memory planner (Alg. 2): paper example, soundness, SSA near-optimality."""
+
+import itertools
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.memplan import Batch, batch_is_zero_copy, plan_memory
+
+
+def test_paper_fig3_example():
+    b1 = Batch("B1", result=("x4", "x5"), sources=(("x1", "x3"), ("x2", "x1")))
+    b2 = Batch("B2", result=("x8", "x6", "x7"), sources=(("x4", "x3", "x5"),))
+    plan = plan_memory([f"x{i}" for i in range(1, 9)], [b1, b2])
+    assert sorted(plan.order) == sorted(f"x{i}" for i in range(1, 9))
+    assert {b.name for b in plan.planned} == {"B1", "B2"}
+    assert batch_is_zero_copy(plan.order, b1)
+    assert batch_is_zero_copy(plan.order, b2)
+
+
+@settings(max_examples=100, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_planned_batches_are_zero_copy(seed):
+    """Soundness: anything the planner reports planned IS zero-copy."""
+    rng = random.Random(seed)
+    nv = rng.randint(3, 8)
+    vars = [f"v{i}" for i in range(nv)]
+    batches = []
+    for b in range(rng.randint(1, 3)):
+        k = rng.randint(2, min(3, nv))
+        res = tuple(rng.sample(vars, k))
+        srcs = tuple(tuple(rng.sample(vars, k)) for _ in range(rng.randint(1, 2)))
+        batches.append(Batch(f"b{b}", res, srcs))
+    plan = plan_memory(vars, batches)
+    assert sorted(plan.order) == sorted(vars)
+    for b in plan.planned:
+        assert batch_is_zero_copy(plan.order, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_ssa_programs_reach_bruteforce_optimum(seed):
+    """On SSA-shaped programs with duplicate-free operands the planner should
+    match the brute-force optimal zero-copy count."""
+    rng = random.Random(seed)
+    n_in = rng.randint(2, 3)
+    vars = [f"i{k}" for k in range(n_in)]
+    batches = []
+    for b in range(rng.randint(1, 3)):
+        size = rng.randint(2, 3)
+        srcs = []
+        for _ in range(rng.randint(1, 2)):
+            if len(vars) >= size:
+                srcs.append(tuple(rng.sample(vars, size)))
+            else:
+                srcs.append(tuple(rng.choice(vars) for _ in range(size)))
+        res = tuple(f"t{b}_{j}" for j in range(size))
+        vars = vars + list(res)
+        batches.append(Batch(f"b{b}", res, tuple(srcs)))
+    if len(vars) > 8:
+        return
+    plan = plan_memory(vars, batches)
+    best = max(sum(batch_is_zero_copy(p, b) for b in batches)
+               for p in itertools.permutations(vars))
+    ours = sum(batch_is_zero_copy(plan.order, b) for b in batches)
+    assert ours == best
+
+
+def test_erased_infeasible_batch_reported():
+    # Three pairwise-overlapping constraints forcing a-b-c-d order, then a
+    # batch demanding {a, c} adjacency must be erased.
+    b1 = Batch("chain1", ("t0", "t1"), (("a", "b"),))
+    b2 = Batch("chain2", ("t2", "t3"), (("b", "c"),))
+    b3 = Batch("chain3", ("t4", "t5"), (("c", "d"),))
+    bad = Batch("bad", ("t6", "t7"), (("a", "c"),))
+    vars = ["a", "b", "c", "d"] + [f"t{i}" for i in range(8)]
+    plan = plan_memory(vars, [b1, b2, b3, bad])
+    assert "bad" in [b.name for b in plan.erased]
+    for b in (b1, b2, b3):
+        assert batch_is_zero_copy(plan.order, b)

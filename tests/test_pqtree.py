@@ -1,0 +1,86 @@
+"""PQ tree vs a brute-force consecutive-ones oracle."""
+
+import itertools
+import random
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pqtree import PQTree, satisfies
+
+
+def test_paper_example_fig4():
+    cons = [{"x4", "x5"}, {"x1", "x3"}, {"x2", "x1"},
+            {"x6", "x7", "x8"}, {"x4", "x3", "x5"}]
+    t = PQTree([f"x{i}" for i in range(1, 9)])
+    for c in cons:
+        assert t.reduce(c)
+    assert satisfies(t.frontier(), cons)
+
+
+def test_infeasible_is_transactional():
+    t = PQTree(list("abcd"))
+    assert t.reduce({"a", "b"})
+    assert t.reduce({"b", "c"})
+    assert t.reduce({"c", "d"})
+    before = t.frontier()
+    # {a, c} cannot be consecutive given a-b-c-d chain order
+    assert not t.reduce({"a", "c"})
+    assert t.frontier() == before
+
+
+@settings(max_examples=150, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_random_vs_bruteforce(seed):
+    rng = random.Random(seed)
+    n = rng.randint(2, 7)
+    uni = list(range(n))
+    conss = [set(rng.sample(uni, rng.randint(2, n)))
+             for _ in range(rng.randint(1, 5))]
+    t = PQTree(uni)
+    committed = []
+    feasible_tree = True
+    for c in conss:
+        if not t.reduce(c):
+            feasible_tree = False
+            break
+        committed.append(c)
+        # soundness: the frontier satisfies everything committed so far
+        assert satisfies(t.frontier(), committed)
+    feasible_truth = any(satisfies(p, conss)
+                         for p in itertools.permutations(uni))
+    assert feasible_tree == feasible_truth
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 100_000))
+def test_all_orientations_satisfy_constraints(seed):
+    """Flipping any Q node / permuting any P node keeps constraints true —
+    i.e. the tree's represented set is sound, not just one frontier."""
+    rng = random.Random(seed)
+    n = rng.randint(3, 7)
+    uni = list(range(n))
+    conss = []
+    t = PQTree(uni)
+    for _ in range(rng.randint(1, 4)):
+        c = set(rng.sample(uni, rng.randint(2, n)))
+        if t.reduce(c):
+            conss.append(c)
+
+    from repro.core.pqtree import LEAF, P, Q
+
+    def random_readout(node):
+        if node.kind == LEAF:
+            return [node.value]
+        kids = list(node.children)
+        if node.kind == P:
+            rng.shuffle(kids)
+        elif rng.random() < 0.5:
+            kids.reverse()
+        out = []
+        for k in kids:
+            out += random_readout(k)
+        return out
+
+    for _ in range(10):
+        assert satisfies(random_readout(t.root), conss)
