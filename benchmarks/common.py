@@ -21,3 +21,16 @@ def timeit(fn, *, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def make_executor(impls, plan: str):
+    """The --plan axis: "interpreted" -> reference DynamicExecutor,
+    "compiled" -> single-dispatch PlanExecutor."""
+    from repro.core.executor import DynamicExecutor
+    from repro.core.plan import PlanExecutor
+
+    if plan == "compiled":
+        return PlanExecutor(impls, None)
+    if plan != "interpreted":
+        raise ValueError(f"unknown plan mode {plan!r}")
+    return DynamicExecutor(impls, None)

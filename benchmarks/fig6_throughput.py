@@ -11,15 +11,17 @@ from __future__ import annotations
 import random
 
 from repro.core.batching import best_baseline_schedule, schedule
-from repro.core.executor import DynamicExecutor, ExecStats
 from repro.core.rl import RLConfig, train_fsm
 from repro.models.workloads import WORKLOADS, make_workload
 
-from .common import emit, timeit
+from .common import emit, make_executor, timeit
 
 
 def run(workloads=None, batch_size: int = 16, model_size: int = 32,
-        seed: int = 0):
+        seed: int = 0, plan: str = "interpreted"):
+    """``plan``: "interpreted" (reference executor), "compiled" (single-jit
+    execution plans), or "both" (emit rows for each, plus the delta)."""
+    plans = ("interpreted", "compiled") if plan == "both" else (plan,)
     rng = random.Random(seed)
     rows = []
     for name in workloads or WORKLOADS:
@@ -29,17 +31,24 @@ def run(workloads=None, batch_size: int = 16, model_size: int = 32,
                         RLConfig(max_iters=600, seed=seed))
         g = wl_ed.sample_graph(rng, batch_size)
 
-        ex_base = DynamicExecutor(wl_base.impls, None)
-        ex_ed = DynamicExecutor(wl_ed.impls, None)
-        t_base = timeit(lambda: ex_base.run(g, best_baseline_schedule))
-        t_ed = timeit(lambda: ex_ed.run(g, res.policy))
-        thr_base = batch_size / t_base
-        thr_ed = batch_size / t_ed
-        emit(f"fig6/{name}/cavs-dynet-proxy", t_base * 1e6 / batch_size,
-             f"inst_per_s={thr_base:.1f}")
-        emit(f"fig6/{name}/ed-batch", t_ed * 1e6 / batch_size,
-             f"inst_per_s={thr_ed:.1f};speedup={thr_ed / thr_base:.2f}x")
-        rows.append((name, thr_base, thr_ed))
+        thr = {}
+        for pl in plans:
+            ex_base = make_executor(wl_base.impls, pl)
+            ex_ed = make_executor(wl_ed.impls, pl)
+            t_base = timeit(lambda: ex_base.run(g, best_baseline_schedule))
+            t_ed = timeit(lambda: ex_ed.run(g, res.policy))
+            thr_base = batch_size / t_base
+            thr_ed = batch_size / t_ed
+            thr[pl] = (thr_base, thr_ed)
+            emit(f"fig6/{name}/cavs-dynet-proxy/{pl}",
+                 t_base * 1e6 / batch_size, f"inst_per_s={thr_base:.1f}")
+            emit(f"fig6/{name}/ed-batch/{pl}", t_ed * 1e6 / batch_size,
+                 f"inst_per_s={thr_ed:.1f};speedup={thr_ed / thr_base:.2f}x")
+            rows.append((name, pl, thr_base, thr_ed))
+        if len(plans) == 2:
+            emit(f"fig6/{name}/plan-delta", 0.0,
+                 f"compiled_over_interpreted="
+                 f"{thr['compiled'][1] / thr['interpreted'][1]:.2f}x")
     return rows
 
 

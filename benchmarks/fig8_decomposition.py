@@ -7,15 +7,19 @@ import random
 import time
 
 from repro.core.batching import best_baseline_schedule
-from repro.core.executor import DynamicExecutor, ExecStats
+from repro.core.executor import ExecStats
 from repro.core.rl import RLConfig, train_fsm
 from repro.models.workloads import make_workload
 
-from .common import emit
+from .common import emit, make_executor
 
 
 def run(workloads=("TreeLSTM", "LatticeLSTM"), batch_size: int = 16,
-        model_size: int = 32, seed: int = 0):
+        model_size: int = 32, seed: int = 0, plan: str = "interpreted"):
+    """``plan``: "interpreted", "compiled", or "both". The compiled rows add
+    the one-time plan lowering+XLA-compile cost as its own component, and
+    "both" emits the steady-state execution delta the plan layer buys."""
+    plans = ("interpreted", "compiled") if plan == "both" else (plan,)
     rng = random.Random(seed)
     rows = []
     for name in workloads:
@@ -28,28 +32,37 @@ def run(workloads=("TreeLSTM", "LatticeLSTM"), batch_size: int = 16,
                 policy = res.policy
             else:
                 policy = best_baseline_schedule
-            ex = DynamicExecutor(wl.impls, None)
             # construction
             t0 = time.perf_counter()
             g = wl.sample_graph(rng, batch_size)
             t_construct = time.perf_counter() - t0
-            # warm, then measure schedule+exec separately (fresh caches for
-            # scheduling time: use a fresh executor)
-            ex.run(g, policy)
-            ex2 = DynamicExecutor(wl.impls, None)
-            stats = ExecStats()
-            ex2.run(g, policy, stats)
-            # execution steady-state (schedule cached now)
-            stats2 = ExecStats()
-            ex2.run(g, policy, stats2)
-            emit(f"fig8/{name}/{system}",
-                 (t_construct + stats.schedule_time + stats2.exec_time) * 1e6,
-                 f"construct_ms={t_construct*1e3:.2f};"
-                 f"schedule_ms={stats.schedule_time*1e3:.2f};"
-                 f"exec_ms={stats2.exec_time*1e3:.2f};"
-                 f"batches={stats2.n_batches}")
-            rows.append((name, system, t_construct, stats.schedule_time,
-                         stats2.exec_time))
+            exec_ms = {}
+            for pl in plans:
+                # warm, then measure schedule+exec separately (fresh caches
+                # for scheduling time: use a fresh executor)
+                make_executor(wl.impls, pl).run(g, policy)
+                ex2 = make_executor(wl.impls, pl)
+                stats = ExecStats()
+                ex2.run(g, policy, stats)
+                # execution steady-state (schedule/plan cached now)
+                stats2 = ExecStats()
+                ex2.run(g, policy, stats2)
+                exec_ms[pl] = stats2.exec_time * 1e3
+                emit(f"fig8/{name}/{system}/{pl}",
+                     (t_construct + stats.schedule_time
+                      + stats2.exec_time) * 1e6,
+                     f"construct_ms={t_construct*1e3:.2f};"
+                     f"schedule_ms={stats.schedule_time*1e3:.2f};"
+                     f"lower_ms={stats.lower_time*1e3:.2f};"
+                     f"exec_ms={stats2.exec_time*1e3:.2f};"
+                     f"batches={stats2.n_batches};"
+                     f"launches={stats2.n_launches}")
+                rows.append((name, system, pl, t_construct,
+                             stats.schedule_time, stats2.exec_time))
+            if len(plans) == 2:
+                emit(f"fig8/{name}/{system}/plan-delta", 0.0,
+                     f"exec_speedup="
+                     f"{exec_ms['interpreted'] / max(exec_ms['compiled'], 1e-9):.2f}x")
     return rows
 
 

@@ -14,6 +14,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer workloads")
+    ap.add_argument("--plan", choices=["interpreted", "compiled", "both"],
+                    default="interpreted",
+                    help="executor for fig6/fig8/table2: the interpreted "
+                         "reference, single-jit compiled plans, or both")
     args = ap.parse_args(argv)
 
     from . import (fig6_throughput, fig8_decomposition, fig9_num_batches,
@@ -25,14 +29,15 @@ def main(argv=None) -> int:
     fig9_num_batches.run(batch_size=8 if args.quick else 16)
     table3_rl_training.run()
     table4_subgraph_compile.run(model_size=32 if args.quick else 64)
-    table2_memplan.run(model_size=32 if args.quick else 64)
+    table2_memplan.run(model_size=32 if args.quick else 64, plan=args.plan)
     table5_cortex_proxy.run(sizes=(32, 64) if args.quick else (64, 128, 256))
     fig6_throughput.run(
         workloads=["TreeLSTM", "LatticeLSTM"] if args.quick else None,
         batch_size=8 if args.quick else 32,
-        model_size=16 if args.quick else 128)
+        model_size=16 if args.quick else 128, plan=args.plan)
     fig8_decomposition.run(batch_size=8 if args.quick else 32,
-                           model_size=16 if args.quick else 128)
+                           model_size=16 if args.quick else 128,
+                           plan=args.plan)
     print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
     return 0
 

@@ -16,7 +16,11 @@ from repro.models.cells import CELLS
 from .common import emit, timeit
 
 
-def run(model_size: int = 64, batch: int = 8, seed: int = 0):
+def run(model_size: int = 64, batch: int = 8, seed: int = 0,
+        plan: str = "interpreted"):
+    """``plan="compiled"`` times AOT-compiled cell executables (no per-call
+    jit-cache lookup); "both" also emits the dispatch-overhead delta."""
+    plans = ("interpreted", "compiled") if plan == "both" else (plan,)
     rng = np.random.default_rng(seed)
     rows = []
     for name, build in CELLS.items():
@@ -32,18 +36,30 @@ def run(model_size: int = 64, batch: int = 8, seed: int = 0):
             rng.standard_normal((batch,) + prog.vars[n].shape), jnp.float32)
             for n in prog.inputs}
 
-        t_d = timeit(lambda: jax.block_until_ready(
-            list(dynet.apply(pbuf_d, inputs).values())))
-        t_p = timeit(lambda: jax.block_until_ready(
-            list(planned.apply(pbuf_p, inputs).values())))
-        sd, sp = dynet.stats, planned.stats
-        emit(f"table2/{name}", t_p * 1e6,
-             f"lat_ratio={t_d / t_p:.2f};"
-             f"memk={sd.n_mem_kernels}->{sp.n_mem_kernels};"
-             f"bytes={sd.bytes_moved(batch)}->{sp.bytes_moved(batch)};"
-             f"bytes_ratio={sd.bytes_moved(batch) / max(sp.bytes_moved(batch), 1):.1f};"
-             f"zero_copy={planned.zero_copy_fraction():.2f}")
-        rows.append((name, t_d, t_p, sd, sp))
+        lat = {}
+        for pl in plans:
+            if pl == "compiled":
+                dyn_fn = dynet.aot_compile(batch)
+                pla_fn = planned.aot_compile(batch)
+            else:
+                dyn_fn, pla_fn = dynet.apply, planned.apply
+            t_d = timeit(lambda: jax.block_until_ready(
+                list(dyn_fn(pbuf_d, inputs).values())))
+            t_p = timeit(lambda: jax.block_until_ready(
+                list(pla_fn(pbuf_p, inputs).values())))
+            lat[pl] = t_p
+            sd, sp = dynet.stats, planned.stats
+            emit(f"table2/{name}/{pl}", t_p * 1e6,
+                 f"lat_ratio={t_d / t_p:.2f};"
+                 f"memk={sd.n_mem_kernels}->{sp.n_mem_kernels};"
+                 f"bytes={sd.bytes_moved(batch)}->{sp.bytes_moved(batch)};"
+                 f"bytes_ratio={sd.bytes_moved(batch) / max(sp.bytes_moved(batch), 1):.1f};"
+                 f"zero_copy={planned.zero_copy_fraction():.2f}")
+            rows.append((name, pl, t_d, t_p, sd, sp))
+        if len(plans) == 2:
+            emit(f"table2/{name}/plan-delta", 0.0,
+                 f"dispatch_overhead="
+                 f"{lat['interpreted'] / max(lat['compiled'], 1e-12):.2f}x")
     return rows
 
 

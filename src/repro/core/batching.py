@@ -30,6 +30,23 @@ def schedule(graph: Graph, policy: Policy) -> Schedule:
     return out
 
 
+def resolve_schedule(graph: Graph,
+                     policy: "Policy | Callable[[Graph], Schedule]") -> Schedule:
+    """Turn either a frontier-type policy or a whole-graph schedule function
+    (e.g. :func:`depth_schedule`) into a concrete schedule."""
+    if callable(policy) and not hasattr(policy, "next_type"):
+        return policy(graph)
+    return schedule(graph, policy)
+
+
+def policy_cache_key(policy) -> Hashable:
+    """Cache key for per-(topology, policy) schedule/plan caches. The policy
+    object itself is the key (identity hash, strong reference): a retrained
+    FSM is a different object, and unlike ``id()`` the key cannot be reused
+    by a new policy allocated at a garbage-collected one's address."""
+    return policy
+
+
 class AgendaPolicy:
     """DyNet's agenda-based heuristic: pick the frontier type whose *remaining*
     nodes have minimal average topological depth (worked example, Fig. 1(c))."""

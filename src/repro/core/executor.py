@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .batching import Policy, Schedule, schedule as make_schedule
+from .batching import (Policy, Schedule, policy_cache_key, resolve_schedule)
 from .graph import Graph, TypeId
 
 
@@ -49,9 +49,10 @@ class NodeImpl:
 @dataclass
 class ExecStats:
     n_batches: int = 0
-    n_launches: int = 0
+    n_launches: int = 0          # device dispatches (1/run on the plan path)
     schedule_time: float = 0.0
     exec_time: float = 0.0
+    lower_time: float = 0.0      # plan lowering + XLA compile (plan path only)
 
 
 class ExecResult:
@@ -76,29 +77,38 @@ class ExecResult:
                 yield n.id
 
     def field(self, fld: str, ids) -> jnp.ndarray:
-        n0 = self._graph.nodes[ids[0]]
-        shape = tuple(self._impls[n0.type].out_fields[fld])
-        return self.bufs[(fld, shape)][np.asarray(ids)]
+        shapes = set()
+        for i in ids:
+            impl = self._impls[self._graph.nodes[i].type]
+            if fld not in impl.out_fields:
+                raise KeyError(f"node {i} ({impl.name}) has no field {fld!r}")
+            shapes.add(tuple(impl.out_fields[fld]))
+        if len(shapes) != 1:
+            raise ValueError(
+                f"field {fld!r} has mixed shapes {sorted(shapes)} across the "
+                f"requested nodes; select per-shape node subsets instead")
+        return self.bufs[(fld, shapes.pop())][np.asarray(ids)]
 
 
 class DynamicExecutor:
     def __init__(self, impls: dict[TypeId, NodeImpl], params: Any):
         self.impls = impls
         self.params = params
+        # FIFO-capped: keys hold policy references, values whole schedules.
         self._schedule_cache: dict[tuple, Schedule] = {}
+        self._schedule_cache_max = 1024
 
     def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
             stats: ExecStats | None = None,
             params: Any = None) -> ExecResult:
         stats = stats if stats is not None else ExecStats()
         t0 = time.perf_counter()
-        key = (graph.topology_key(), id(policy))
+        key = (graph.topology_key(), policy_cache_key(policy))
         sched = self._schedule_cache.get(key)
         if sched is None:
-            if callable(policy) and not hasattr(policy, "next_type"):
-                sched = policy(graph)
-            else:
-                sched = make_schedule(graph, policy)
+            sched = resolve_schedule(graph, policy)
+            if len(self._schedule_cache) >= self._schedule_cache_max:
+                self._schedule_cache.pop(next(iter(self._schedule_cache)))
             self._schedule_cache[key] = sched
         stats.schedule_time += time.perf_counter() - t0
 
@@ -116,9 +126,14 @@ class DynamicExecutor:
             for (slot, fld) in impl.in_slots:
                 src = np.asarray([nodes[i].inputs[slot] for i in ids],
                                  np.int32)
-                pred_t = nodes[nodes[ids[0]].inputs[slot]].type
-                shape = tuple(self.impls[pred_t].out_fields[fld])
-                inputs.append(bufs[(fld, shape)][src])
+                shapes = {tuple(self.impls[nodes[p].type].out_fields[fld])
+                          for p in src}
+                if len(shapes) != 1:
+                    raise ValueError(
+                        f"batch of {t!r} slot {slot} field {fld!r} mixes "
+                        f"element shapes {sorted(shapes)}; such batches "
+                        f"cannot gather from one buffer")
+                inputs.append(bufs[(fld, shapes.pop())][src])
             aux = jnp.asarray(np.asarray(
                 [n.attrs.get("aux", 0) for n in (nodes[i] for i in ids)],
                 np.int32))
@@ -140,6 +155,9 @@ def cell_impl(name: str, compiled_cell, in_slots: list[tuple[int, str]],
     """Wrap a CompiledCell as a NodeImpl: cell inputs come from predecessor
     fields in order; outputs are the cell's outputs."""
     prog = compiled_cell.prog
+    # Built once per impl: rebuilding inside apply caused a full retrace of
+    # the cell body on every training-mode invocation.
+    traced_apply = compiled_cell._build_apply()
 
     def apply(params, inputs, aux):
         # Threaded params (training) override the baked buffer; executor
@@ -157,7 +175,7 @@ def cell_impl(name: str, compiled_cell, in_slots: list[tuple[int, str]],
                 x = jnp.pad(x, pad)
             feed[nm] = x
         if isinstance(params, dict) and name in params:
-            out = compiled_cell._build_apply()(buf, feed)  # stay traceable
+            out = traced_apply(buf, feed)  # stay traceable
         else:
             out = compiled_cell.apply(buf, feed)
         if kp != k:

@@ -507,6 +507,31 @@ def plan_memory(variables: Sequence[Var], batches: Sequence[Batch],
 
 
 # --------------------------------------------------------------------------
+# Row tables (arena lowering; core/plan.py)
+# --------------------------------------------------------------------------
+
+
+def plan_rows(variables: Sequence[Var],
+              batches: Sequence[Batch]) -> tuple[Plan, dict[Var, int]]:
+    """Plan a layout of unit-size rows (one arena row per variable) and
+    return the plan plus its row table ``var -> row``. This is the entry the
+    compiled-plan executor uses: arenas are (rows, *elem) buffers, so offsets
+    are row indices rather than flat element offsets."""
+    plan = plan_memory(variables, batches)  # unit sizes: offsets ARE rows
+    return plan, dict(plan.offsets)
+
+
+def operand_run(row_of: dict[Var, int], op: Sequence[Var]) -> int | None:
+    """The start row if ``op`` reads out as one ascending contiguous run of
+    rows (stride exactly +1, duplicates disallowed) — i.e. the operand lowers
+    to a static slice. ``None`` means it must gather."""
+    rows = [row_of[v] for v in op]
+    if any(rows[i + 1] - rows[i] != 1 for i in range(len(rows) - 1)):
+        return None
+    return rows[0]
+
+
+# --------------------------------------------------------------------------
 # Layout quality oracle (used by tests and the Table 2 ablation)
 # --------------------------------------------------------------------------
 

@@ -370,6 +370,17 @@ class CompiledCell:
             self._apply_cache[B] = fn
         return fn(pbuf, inputs)
 
+    def aot_compile(self, B: int):
+        """Ahead-of-time lower + compile the cell for batch size ``B``: the
+        returned executable skips the per-call jit cache lookup and retrace
+        checks — the cell-level analogue of the plan compilation in
+        core/plan.py (Table 2's ``--plan=compiled`` axis)."""
+        pspec = jax.ShapeDtypeStruct((self.param_size,), self.dtype)
+        ispecs = {n: jax.ShapeDtypeStruct((B,) + self.prog.vars[n].shape,
+                                          self.dtype)
+                  for n in self.prog.inputs}
+        return jax.jit(self._build_apply()).lower(pspec, ispecs).compile()
+
     def reference_apply(self, pbuf, inputs: dict[str, jnp.ndarray]):
         """Unbatched oracle: execute ops one by one straight off dicts."""
         env: dict[str, jnp.ndarray] = {}

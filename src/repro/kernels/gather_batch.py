@@ -45,3 +45,22 @@ def gather_rows_kernel(src, idx, *, block_d: int = 512,
         out_shape=jax.ShapeDtypeStruct((K, D), src.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), src)
+
+
+def gather_rows(src, idx, *, interpret: bool = False):
+    """Backend-dispatching row gather: ``src[idx]`` along axis 0.
+
+    The compiled-plan executor (core/plan.py) routes every unplanned operand
+    here. On TPU, 2-D sources with a tileable row length use the
+    scalar-prefetch Pallas kernel above; everything else (CPU/GPU backends,
+    >2-D element shapes, ragged row lengths) lowers to ``jnp.take``, which XLA
+    fuses into the surrounding single-dispatch program.
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    D = src.shape[1] if src.ndim == 2 else 0
+    if jax.default_backend() == "tpu" and src.ndim == 2 and D % 128 == 0:
+        # Lane-aligned rows only (128 = TPU lane width); pick the largest
+        # block that still divides D so the kernel's tiling assert holds.
+        bd = 512 if D % 512 == 0 else 128
+        return gather_rows_kernel(src, idx, block_d=bd, interpret=interpret)
+    return jnp.take(src, idx, axis=0)

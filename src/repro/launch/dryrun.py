@@ -1,6 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
+import sys as _sys
+if "--dynamic" not in _sys.argv:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (architecture x input shape) on
 the production mesh, with memory and cost analysis captured for the roofline.
@@ -8,11 +10,13 @@ the production mesh, with memory and cost analysis captured for the roofline.
 MUST be imported before any other jax-touching module — the XLA_FLAGS line
 above runs first and gives this process 512 host devices (placeholders for
 the 2x16x16 production mesh). Do not set that flag globally: smoke tests and
-benchmarks should see 1 device.
+benchmarks should see 1 device — which is also why --dynamic (single-device
+dynamic-workload plan compilation) skips it.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out r.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --dynamic [--out r.json]
 """
 
 import argparse
@@ -42,6 +46,15 @@ SHAPES = {
 }
 
 SLIDING_WINDOW_500K = 8192  # sub-quadratic variant for full-attention archs
+
+
+def _cost_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a dict on current jax but a
+    one-element list of dicts on some releases — normalize."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
 
 
 def resolve_config(arch: str, shape: str):
@@ -229,7 +242,7 @@ def block_cost(model: TransformerLM, part: Partitioner, shape: str,
     jb = jax.jit(fn, in_shardings=shardings)
     lowered = jb.lower(*args)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = _cost_dict(compiled)
     coll = collective_bytes(compiled.as_text())
     return (float(cost.get("flops", 0.0)),
             float(cost.get("bytes accessed", 0.0)), coll)
@@ -264,7 +277,7 @@ def dryrun_one(arch: str, shape: str, *, multi_pod: bool = False,
         lowered = jitted.lower(*arg_specs)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled)
         hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         info = SHAPES[shape]
@@ -311,11 +324,53 @@ def dryrun_one(arch: str, shape: str, *, multi_pod: bool = False,
     return row
 
 
+def dryrun_dynamic(workloads=None, model_size: int = 16, batch_size: int = 2,
+                   seed: int = 0, verbose: bool = True) -> list[dict]:
+    """Lower + compile the dynamic-workload execution plans (core/plan.py)
+    and report the lowering outcome per workload: step/arena counts, how many
+    operands became contiguous slices vs gather fallbacks, and lowering /
+    XLA-compile time. The dynamic-graph counterpart of the static arch sweep."""
+    import random
+
+    from repro.core.batching import SufficientConditionPolicy
+    from repro.core.plan import PlanExecutor
+    from repro.models.workloads import WORKLOADS, make_workload
+
+    rng = random.Random(seed)
+    rows = []
+    for name in workloads or WORKLOADS:
+        t0 = time.time()
+        try:
+            wl = make_workload(name, model_size, seed, layout="planned")
+            g = wl.sample_graph(rng, batch_size)
+            ex = PlanExecutor(wl.impls, None)
+            policy = SufficientConditionPolicy()
+            ex.run(g, policy)            # lower + compile + one dispatch
+            stats = ex.plan_for(g, policy).stats
+            row = {"workload": name, "ok": True, "nodes": len(g),
+                   "wall_s": round(time.time() - t0, 2), **stats.as_dict()}
+        except Exception as e:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            row = {"workload": name, "ok": False, "error": str(e)[:500]}
+        rows.append(row)
+        if verbose and row["ok"]:
+            print(f"[dryrun-dynamic] {name}: {row['n_steps']} steps -> 1 "
+                  f"dispatch, {row['n_arenas']} arenas ({row['layout']} "
+                  f"layout), {row['n_slice_reads']} slice / "
+                  f"{row['n_gather_reads']} gather reads, "
+                  f"{row['n_gather_fallback_steps']} fallback steps, "
+                  f"compile {row['compile_time_s']:.2f}s", flush=True)
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS)
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--dynamic", action="store_true",
+                    help="compile the dynamic-workload execution plans "
+                         "instead of the static arch x shape sweep")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true",
@@ -330,6 +385,26 @@ def main(argv=None):
                     help="replicate params; model axis = seq-data parallel")
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
+
+    # Re-assert the device-count flag from the *parsed* argv (the import-time
+    # sniff only sees the process argv, which is wrong for main([...]) calls).
+    # Effective as long as no jax backend has been initialized yet, which
+    # holds when main() runs right after import.
+    flag = " --xla_force_host_platform_device_count=512"
+    if args.dynamic:
+        os.environ["XLA_FLAGS"] = \
+            os.environ.get("XLA_FLAGS", "").replace(flag, "")
+    elif flag not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + flag
+
+    if args.dynamic:
+        rows = dryrun_dynamic()
+        failures = sum(1 for r in rows if not r["ok"])
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(rows, f, indent=1, default=str)
+            print(f"wrote {args.out} ({len(rows)} rows, {failures} failures)")
+        return 1 if failures else 0
 
     combos = []
     if args.all:

@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.arch.model import TransformerLM
-from repro.core.batching import SufficientConditionPolicy, schedule
+from repro.core.batching import (SufficientConditionPolicy, policy_cache_key,
+                                 resolve_schedule)
 from repro.core.graph import Graph, Node
 
 
@@ -38,6 +39,8 @@ class ServeStats:
     n_prefill_batches: int = 0
     n_decode_batches: int = 0
     wall_s: float = 0.0
+    schedule_s: float = 0.0      # wave-scheduling time (0 on cache hits)
+    sched_cache_hits: int = 0
     tokens_out: int = 0
 
     @property
@@ -75,6 +78,13 @@ class ServeEngine:
         self._prefill_jit = jax.jit(
             lambda p, t: model.prefill(p, t, cache_len=cache_len))
         self._decode_jit = jax.jit(model.decode_step)
+        # Wave schedules cached per request-graph topology: recurring traffic
+        # shapes (same mix of prompt buckets and decode lengths) skip the
+        # Alg. 1 walk entirely — the serving analogue of the compiled-plan
+        # cache in core/plan.py. FIFO-capped: long-running processes see an
+        # unbounded stream of distinct wave shapes.
+        self._sched_cache: dict[tuple, list] = {}
+        self._sched_cache_max = 256
 
     def generate(self, prompts: list[list[int]], max_new: int = 16,
                  greedy: bool = True, stats: ServeStats | None = None):
@@ -82,7 +92,17 @@ class ServeEngine:
         stats = stats if stats is not None else ServeStats()
         t0 = time.perf_counter()
         g = request_graph(reqs)
-        sched = schedule(g, self.policy)
+        key = (g.topology_key(), policy_cache_key(self.policy))
+        sched = self._sched_cache.get(key)
+        if sched is None:
+            ts = time.perf_counter()
+            sched = resolve_schedule(g, self.policy)
+            stats.schedule_s += time.perf_counter() - ts
+            if len(self._sched_cache) >= self._sched_cache_max:
+                self._sched_cache.pop(next(iter(self._sched_cache)))
+            self._sched_cache[key] = sched
+        else:
+            stats.sched_cache_hits += 1
 
         B = len(reqs)
         caches = None

@@ -1,0 +1,44 @@
+"""Optional-hypothesis shim.
+
+The CPU container ships without ``hypothesis``; importing it unconditionally
+made the whole tier-1 suite fail collection. Test modules import ``given``,
+``settings`` and ``st`` from here instead: with hypothesis installed (CI
+installs ``requirements-dev.txt``) this is a transparent re-export; without
+it, ``@given`` marks just the property tests as skipped and every
+example-based test in the same module still runs.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Stand-in accepted anywhere a strategy is composed or called."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    class _Strategies:
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco

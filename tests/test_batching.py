@@ -4,8 +4,7 @@ property tests over random DAGs."""
 import random
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from conftest import build_fig1_tree, random_dag
 from repro.core.batching import (AgendaPolicy, SufficientConditionPolicy,

@@ -3,8 +3,7 @@
 import itertools
 import random
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.memplan import Batch, batch_is_zero_copy, plan_memory
 
@@ -79,3 +78,30 @@ def test_erased_infeasible_batch_reported():
     assert "bad" in [b.name for b in plan.erased]
     for b in (b1, b2, b3):
         assert batch_is_zero_copy(plan.order, b)
+
+
+# -- row tables (arena lowering, core/plan.py) ------------------------------
+
+
+def test_plan_rows_returns_row_table():
+    from repro.core.memplan import operand_run, plan_rows
+
+    b = Batch("b0", ("r0", "r1", "r2"), (("s0", "s1", "s2"),))
+    variables = ["s0", "r0", "s1", "r1", "s2", "r2"]
+    plan, row_of = plan_rows(variables, [b])
+    assert sorted(row_of.values()) == list(range(len(variables)))
+    assert row_of == {v: i for i, v in enumerate(plan.order)}
+    # both operands planned into ascending contiguous, aligned runs
+    starts = [operand_run(row_of, op) for op in (b.result, b.sources[0])]
+    assert None not in starts
+
+
+def test_operand_run_detects_slices():
+    from repro.core.memplan import operand_run
+
+    row_of = {"a": 0, "b": 1, "c": 2, "d": 5}
+    assert operand_run(row_of, ("a", "b", "c")) == 0
+    assert operand_run(row_of, ("b", "c")) == 1
+    assert operand_run(row_of, ("c", "b")) is None      # descending
+    assert operand_run(row_of, ("a", "b", "d")) is None  # gap
+    assert operand_run(row_of, ("a",)) == 0

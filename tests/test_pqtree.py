@@ -3,8 +3,7 @@
 import itertools
 import random
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.pqtree import PQTree, satisfies
 
