@@ -1,0 +1,44 @@
+"""FIFO-capped caches shared across executors and the serve subsystem.
+
+PR 1 gave every executor its own capped dict; the serve layer runs several
+executors (one per workload family, plus equivalence/baseline twins) against
+one stream of topologies, so caches are now first-class objects that can be
+*shared*: one :class:`FIFOCache` instance, keyed by
+``(namespace, topology fingerprint, policy fingerprint)``, serves every
+engine that is handed it. The namespace must identify the impl set (the
+serve engine uses ``(family, id(impls))``), not just a family label —
+otherwise engines built around different weights would alias each other's
+entries. Hit/miss counters feed ``ServeStats``.
+"""
+
+from __future__ import annotations
+
+
+class FIFOCache(dict):
+    """Insertion-ordered dict with a FIFO size cap and hit/miss counters.
+
+    Subclasses ``dict`` so existing code (and tests) that treat caches as
+    plain dicts keep working; only ``get`` counts hits/misses and only
+    ``__setitem__`` evicts (oldest-inserted first, never the key being set).
+    """
+
+    def __init__(self, maxsize: int):
+        super().__init__()
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, default=None):
+        if key in self:
+            self.hits += 1
+            return super().__getitem__(key)
+        self.misses += 1
+        return default
+
+    def __setitem__(self, key, value) -> None:
+        if key not in self:
+            while len(self) >= self.maxsize:
+                super().pop(next(iter(self)))
+        super().__setitem__(key, value)

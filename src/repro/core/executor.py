@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .batching import (Policy, Schedule, policy_cache_key, resolve_schedule)
+from .cache import FIFOCache
 from .graph import Graph, TypeId
 
 
@@ -91,24 +92,27 @@ class ExecResult:
 
 
 class DynamicExecutor:
-    def __init__(self, impls: dict[TypeId, NodeImpl], params: Any):
+    def __init__(self, impls: dict[TypeId, NodeImpl], params: Any, *,
+                 schedule_cache: FIFOCache | None = None,
+                 namespace: Any = None):
         self.impls = impls
         self.params = params
-        # FIFO-capped: keys hold policy references, values whole schedules.
-        self._schedule_cache: dict[tuple, Schedule] = {}
-        self._schedule_cache_max = 1024
+        # FIFO-capped: keys hold policy fingerprints (or references), values
+        # whole schedules. A shared cache (serve layer) is namespaced so
+        # different impl sets never alias each other's topologies.
+        self._schedule_cache = (schedule_cache if schedule_cache is not None
+                                else FIFOCache(1024))
+        self._ns = namespace
 
     def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
             stats: ExecStats | None = None,
             params: Any = None) -> ExecResult:
         stats = stats if stats is not None else ExecStats()
         t0 = time.perf_counter()
-        key = (graph.topology_key(), policy_cache_key(policy))
+        key = (self._ns, graph.topology_key(), policy_cache_key(policy))
         sched = self._schedule_cache.get(key)
         if sched is None:
             sched = resolve_schedule(graph, policy)
-            if len(self._schedule_cache) >= self._schedule_cache_max:
-                self._schedule_cache.pop(next(iter(self._schedule_cache)))
             self._schedule_cache[key] = sched
         stats.schedule_time += time.perf_counter() - t0
 

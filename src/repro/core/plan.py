@@ -44,6 +44,7 @@ import numpy as np
 
 from . import memplan
 from .batching import Policy, Schedule, policy_cache_key, resolve_schedule
+from .cache import FIFOCache
 from .executor import ExecStats, NodeImpl
 from .graph import Graph, TypeId
 
@@ -172,8 +173,7 @@ class CompiledPlan:
         # AOT executables + arena pools, keyed by the params pytree kind
         # (structure + leaf avals) so eval (None) and training (dict) runs
         # coexist without recompiling on every alternation. FIFO-capped.
-        self._exes: dict[tuple, tuple[Any, dict[ArenaKey, jnp.ndarray]]] = {}
-        self._exes_max = 4
+        self._exes: FIFOCache = FIFOCache(4)
         self.n_dispatches = 0     # device dispatches issued by execute()
 
     # -- lowering (host-side, once per topology) ---------------------------
@@ -380,8 +380,6 @@ class CompiledPlan:
         jitted = jax.jit(self._body,
                          donate_argnums=(2,) if self.donate else ())
         exe = jitted.lower(params, aux_flat, pool).compile()
-        if len(self._exes) >= self._exes_max:
-            self._exes.pop(next(iter(self._exes)))
         self._exes[key] = (exe, pool)
         self.stats.compile_time_s += time.perf_counter() - t0
         return key
@@ -409,7 +407,8 @@ class PlanExecutor:
 
     def __init__(self, impls: dict[TypeId, NodeImpl], params: Any, *,
                  layout: str = "planned", max_pq_vars: int = 512,
-                 donate: bool = False, gather_interpret: bool = False):
+                 donate: bool = False, gather_interpret: bool = False,
+                 cache: FIFOCache | None = None, namespace: Any = None):
         self.impls = impls
         self.params = params
         self.layout = layout
@@ -418,14 +417,15 @@ class PlanExecutor:
         self.gather_interpret = gather_interpret
         # FIFO-capped: each entry pins a policy, the lowered steps, AOT
         # executables, and arena pools — an unbounded topology stream must
-        # not grow host/device memory forever.
-        self._plans: dict[tuple, CompiledPlan] = {}
-        self._plans_max = 32
+        # not grow host/device memory forever. The serve layer passes one
+        # shared cache (namespaced per workload family) across its engines.
+        self._plans = cache if cache is not None else FIFOCache(32)
+        self._ns = namespace
 
     def plan_for(self, graph: Graph,
                  policy: Policy | Callable[[Graph], Schedule],
                  stats: ExecStats | None = None) -> CompiledPlan:
-        key = (graph.topology_key(), policy_cache_key(policy))
+        key = (self._ns, graph.topology_key(), policy_cache_key(policy))
         plan = self._plans.get(key)
         if plan is None:
             t0 = time.perf_counter()
@@ -435,8 +435,6 @@ class PlanExecutor:
                                 max_pq_vars=self.max_pq_vars,
                                 donate=self.donate,
                                 gather_interpret=self.gather_interpret)
-            if len(self._plans) >= self._plans_max:
-                self._plans.pop(next(iter(self._plans)))
             self._plans[key] = plan
             if stats is not None:
                 stats.schedule_time += t1 - t0

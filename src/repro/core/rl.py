@@ -38,12 +38,13 @@ class RLConfig:
 
 @dataclass
 class RLResult:
-    policy: FSMPolicy
+    policy: FSMPolicy            # the final policy (greedy over the Q-table)
     iters: int
     train_time_s: float
-    best_batches: int
+    best_batches: int            # best greedy batch count seen at any check
+    final_batches: int           # greedy batch count of the returned policy
     lower_bound: int
-    reached_lower_bound: bool
+    reached_lower_bound: bool    # best_batches <= lower_bound
     history: list[int] = field(default_factory=list)
 
 
@@ -57,7 +58,7 @@ def train_fsm(graphs: Sequence[Graph], config: RLConfig | None = None) -> RLResu
     enc: Encoder = ENCODERS[cfg.encoding]
     rng = random.Random(cfg.seed)
     q: dict[Hashable, dict[TypeId, float]] = {}
-    policy = FSMPolicy(q, enc)
+    policy = FSMPolicy(q, enc, encoding=cfg.encoding)
     lb = sum(g.batch_lower_bound() for g in graphs)
     eps = cfg.epsilon0
     best = _greedy_batches(graphs, policy)
@@ -109,12 +110,17 @@ def train_fsm(graphs: Sequence[Graph], config: RLConfig | None = None) -> RLResu
 
     final = _greedy_batches(graphs, policy)
     best = min(best, final)
+    # ``best`` is the min over every greedy evaluation (initial, periodic
+    # checks, final); a policy that regressed after its best checkpoint must
+    # not report the regressed count as "best", nor derive the lower-bound
+    # flag from it. ``final_batches`` is what the *returned* policy scores.
     return RLResult(
         policy=policy,
         iters=iters_run,
         train_time_s=time.perf_counter() - t0,
-        best_batches=final,
+        best_batches=best,
+        final_batches=final,
         lower_bound=lb,
-        reached_lower_bound=final <= lb,
+        reached_lower_bound=best <= lb,
         history=history,
     )

@@ -1,53 +1,185 @@
-"""Serving launcher: batched generation over a synthetic request wave.
+"""Serving launcher: trace- or rate-driven continuous batching.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-        --requests 16 --max-new 16
+Drives the ``repro.serve`` subsystem over a synthetic (or JSON) request
+trace mixing the three servable families, optionally training + persisting
+FSM batching policies first, and reports throughput, batching, cache, and
+latency-percentile stats.
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 24 --rate 4 \
+        --families lm,tree,lattice --mode continuous --plan compiled
+
+    # train FSM policies per family, persist them, then serve with them
+    PYTHONPATH=src python -m repro.launch.serve --registry runs/registry \
+        --train-policy --requests 16
+
+Trace JSON format (``--trace``): a list of entries
+``{"family": "lm", "arrival": 0.5, "prompt": [1,2,3], "max_new": 8}`` —
+single-shot entries use ``{"family": "tree", "arrival": ..., "size": 8}``
+(the request graph is sampled with ``size`` leaves/chars).
+
+The legacy wave-by-wave TransformerLM engine lives on in
+``repro.serve.lm_wave`` (``python -m repro.launch.serve --legacy-arch
+qwen2-0.5b`` serves one wave through it for comparison).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import random
 
-import jax
 import numpy as np
 
-from repro.arch.model import TransformerLM
-from repro.configs import ARCHS, get_config
-from repro.serve.engine import ServeEngine
-from repro.train.checkpoint import load_checkpoint
+from repro.core.rl import RLConfig, train_fsm
+from repro.models.workloads import SERVE_FAMILIES, make_workload
+from repro.serve import (PolicyRegistry, ServeEngine, graph_request,
+                         lm_request, synth_trace)
+
+
+def load_trace(path: str, workloads, max_new_default: int):
+    rng = random.Random(0)
+    reqs = []
+    with open(path) as f:
+        entries = json.load(f)
+    for e in entries:
+        fam = e["family"]
+        if fam not in workloads:
+            raise ValueError(
+                f"trace entry family {fam!r} not in served families "
+                f"{sorted(workloads)} (check --families and the trace file)")
+        arrival = float(e.get("arrival", 0.0))
+        if fam == "lm":
+            reqs.append(lm_request(e["prompt"],
+                                   int(e.get("max_new", max_new_default)),
+                                   arrival))
+        elif fam == "tree":
+            size = int(e.get("size", 6))
+            g = workloads["tree"].sample_graph(rng, 1, leaves_lo=size,
+                                               leaves_hi=size)
+            reqs.append(graph_request("tree", g, arrival))
+        else:
+            size = int(e.get("size", 8))
+            g = workloads["lattice"].sample_graph(rng, 1, lo=size, hi=size)
+            reqs.append(graph_request("lattice", g, arrival))
+    return reqs
+
+
+def train_policies(registry: PolicyRegistry, families: list[str], workloads,
+                   seed: int = 0, max_iters: int = 300) -> None:
+    rng = random.Random(seed)
+    for fam in families:
+        wl = workloads[fam]
+        if fam == "lm":
+            graphs = [wl.sample_graph(rng, 2, lo=4, hi=10) for _ in range(3)]
+        elif fam == "tree":
+            graphs = [wl.sample_graph(rng, 2, leaves_lo=4, leaves_hi=8)
+                      for _ in range(3)]
+        else:
+            graphs = [wl.sample_graph(rng, 2, lo=5, hi=10) for _ in range(3)]
+        res = train_fsm(graphs, RLConfig(max_iters=max_iters, seed=seed))
+        fp = registry.save_result(fam, res)
+        print(f"trained {fam}: batches {res.best_batches} "
+              f"(lb {res.lower_bound}, reached={res.reached_lower_bound}) "
+              f"-> {fp}")
+
+
+def legacy_wave(arch: str, requests: int, max_new: int, seed: int,
+                checkpoint: str = "") -> int:
+    import jax
+    from repro.arch.model import TransformerLM
+    from repro.configs import get_config
+    from repro.serve.lm_wave import ServeEngine as LMWaveEngine
+    from repro.train.checkpoint import load_checkpoint
+
+    cfg = get_config(arch).reduced()
+    model = TransformerLM(cfg)
+    params = model.init_params(jax.random.PRNGKey(seed))
+    if checkpoint:
+        params, _, step, _ = load_checkpoint(checkpoint, params)
+        print(f"restored step {step} from {checkpoint}")
+    nrng = np.random.default_rng(seed)
+    prompts = [list(nrng.integers(0, cfg.vocab, int(nrng.integers(4, 24))))
+               for _ in range(requests)]
+    outs, stats = LMWaveEngine(model, params).generate(prompts, max_new)
+    print(f"[legacy {arch}] {len(outs)} requests, {stats.tokens_out} tokens "
+          f"in {stats.wall_s:.2f}s ({stats.tok_per_s:.1f} tok/s), "
+          f"{stats.n_batches} batches")
+    return 0
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCHS, required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--families", default="lm,tree,lattice")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="arrivals per scheduler round")
+    ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--model-size", type=int, default=32)
+    ap.add_argument("--max-slots", type=int, default=16)
+    ap.add_argument("--mode", choices=["continuous", "wave"],
+                    default="continuous")
+    ap.add_argument("--plan", choices=["compiled", "interpreted"],
+                    default="compiled")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--checkpoint", default="")
+    ap.add_argument("--trace", default="", help="JSON trace file")
+    ap.add_argument("--registry", default="", help="policy registry dir")
+    ap.add_argument("--train-policy", action="store_true",
+                    help="train + persist FSM policies before serving")
+    ap.add_argument("--out", default="", help="write ServeStats JSON here")
+    ap.add_argument("--legacy-arch", default="",
+                    help="serve one wave through the legacy TransformerLM "
+                         "engine instead (e.g. qwen2-0.5b)")
+    ap.add_argument("--checkpoint", default="",
+                    help="restore TransformerLM weights (legacy path only)")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    model = TransformerLM(cfg)
-    params = model.init_params(jax.random.PRNGKey(args.seed))
+    if args.legacy_arch:
+        return legacy_wave(args.legacy_arch, args.requests, args.max_new,
+                           args.seed, args.checkpoint)
     if args.checkpoint:
-        params, _, step, _ = load_checkpoint(args.checkpoint, params)
-        print(f"restored step {step} from {args.checkpoint}")
-    rng = np.random.default_rng(args.seed)
-    prompts = [list(rng.integers(0, cfg.vocab, int(rng.integers(4, 24))))
-               for _ in range(args.requests)]
-    eng = ServeEngine(model, params, cache_len=args.cache_len)
-    outs, stats = eng.generate(prompts, max_new=args.max_new)
-    print(f"{len(outs)} requests, {stats.tokens_out} tokens in "
-          f"{stats.wall_s:.2f}s ({stats.tok_per_s:.1f} tok/s); "
-          f"{stats.n_batches} batches "
-          f"({stats.n_prefill_batches} prefill / {stats.n_decode_batches} "
-          f"decode)")
-    return outs, stats
+        ap.error("--checkpoint applies to the --legacy-arch path; graph "
+                 "workload weights are seeded via --seed")
+
+    families = [f.strip() for f in args.families.split(",") if f.strip()]
+    workloads = {f: make_workload(SERVE_FAMILIES[f], args.model_size,
+                                  args.seed) for f in families}
+    registry = PolicyRegistry(args.registry) if args.registry else None
+    if args.train_policy:
+        if registry is None:
+            ap.error("--train-policy needs --registry")
+        train_policies(registry, families, workloads, args.seed)
+
+    if args.trace:
+        reqs = load_trace(args.trace, workloads, args.max_new)
+    else:
+        reqs = synth_trace(families, args.requests, args.rate, args.max_new,
+                           workloads, args.seed)
+
+    eng = ServeEngine(workloads, compiled=args.plan == "compiled",
+                      continuous=args.mode == "continuous",
+                      max_slots=args.max_slots, model_size=args.model_size,
+                      seed=args.seed, registry=registry)
+    eng.submit_many(reqs)
+    stats = eng.run()
+
+    pct = stats.latency_percentiles()
+    print(f"{stats.requests_done} requests ({stats.tokens_out} tokens, "
+          f"{stats.outputs_out} single-shot outputs) in {stats.wall_s:.2f}s "
+          f"= {stats.tok_per_s:.1f} tok/s over {stats.n_rounds} rounds")
+    print(f"batches {stats.n_batches}, device launches {stats.n_launches}; "
+          f"plan cache {stats.plan_cache_hits}h/{stats.plan_cache_misses}m, "
+          f"schedule cache {stats.sched_cache_hits}h/"
+          f"{stats.sched_cache_misses}m")
+    print(f"latency p50/p95/p99 {pct['p50_latency_s'] * 1e3:.0f}/"
+          f"{pct['p95_latency_s'] * 1e3:.0f}/"
+          f"{pct['p99_latency_s'] * 1e3:.0f} ms, "
+          f"ttft p50 {pct['p50_ttft_s'] * 1e3:.0f} ms")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(stats.as_dict(), f, indent=1)
+        print(f"# wrote {args.out}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -90,6 +90,85 @@ class BiLSTMTagger:
         return Graph(nodes)
 
 
+class ChainLM:
+    """Autoregressive chain LM — the servable "chain LM decode" family.
+
+    A language model as a dynamic dataflow graph: prefill is a chain of
+    LSTM cells over the prompt tokens, decode is one cell per generated
+    token. Unlike the offline workloads, generation is closed-loop (the
+    next embed's ``aux`` is the argmax of the previous logits), so the
+    serve engine executes one *round graph* per decode step and carries
+    per-request recurrent state across rounds in a slot pool:
+
+    - ``R`` (resume) nodes read a request's ``(h, c)`` out of the pool,
+      indexed by slot id in ``aux``. The pool is threaded through executor
+      ``params`` (key ``"slots"``), never baked into a compiled plan, so
+      one AOT executable serves every round.
+    - After a round the engine scatters each live request's last cell state
+      back into its slot.
+
+    Round-graph topology depends only on the number of prefill chains per
+    length bucket and the (padded) decode count — token ids and slot ids
+    are ``aux`` data — so recurring traffic shapes hit the per-topology
+    schedule/plan caches.
+    """
+
+    name = "ChainLM"
+    state_fields = ("h_out", "c_out")
+
+    def __init__(self, model_size: int = 64, seed: int = 0,
+                 layout: str = "planned", vocab: int = 256):
+        rng = np.random.default_rng(seed)
+        h = model_size
+        self.model_size = h
+        self.vocab = vocab
+        dec = CompiledCell(lstm_cell(h, h), layout)
+        table = jnp.asarray(0.1 * rng.standard_normal((vocab, h)), jnp.float32)
+        wo = jnp.asarray(0.1 * rng.standard_normal((h, vocab)), jnp.float32)
+        bo = jnp.zeros(vocab, jnp.float32)
+
+        def out_apply(params, inputs, aux):
+            return {"y": inputs[0] @ wo + bo}
+
+        def slot_apply(params, inputs, aux):
+            slots = params["slots"]       # engine-threaded, (max_slots, h)
+            return {f: slots[f][aux] for f in ChainLM.state_fields}
+
+        self.impls = {
+            "E": embed_impl("E", table, "x"),
+            "S": _zero_state_impl(h),
+            "R": NodeImpl("R", [], {"h_out": (h,), "c_out": (h,)}, slot_apply),
+            "C": cell_impl("C", dec, [(1, "x"), (0, "h_out"), (0, "c_out")],
+                           ["x", "h", "c"], dec.init_params(rng)),
+            "O": NodeImpl("O", [(0, "h_out")], {"y": (vocab,)}, out_apply),
+        }
+        self.cells = {"LSTMCell": dec}
+
+    def init_slots(self, n_slots: int) -> dict[str, jnp.ndarray]:
+        return {f: jnp.zeros((n_slots, self.model_size), jnp.float32)
+                for f in self.state_fields}
+
+    def sample_graph(self, rng: random.Random, batch_size: int,
+                     lo: int = 4, hi: int = 16) -> Graph:
+        """Offline view (scoring a known token sequence), for RL training:
+        same types the serve rounds use, S -> (E, C)* -> O per sequence."""
+        nodes: list[Node] = []
+
+        def add(type_, inputs=(), aux=0):
+            nodes.append(Node(id=len(nodes), type=type_, inputs=tuple(inputs),
+                              attrs={"aux": aux}))
+            return len(nodes) - 1
+
+        for _ in range(batch_size):
+            toks = random_sentence(rng, lo, hi, self.vocab)
+            prev = add("S")
+            for t in toks:
+                e = add("E", aux=t)
+                prev = add("C", (prev, e))
+                add("O", (prev,))
+        return Graph(nodes)
+
+
 class LSTMNMT:
     name = "LSTM-NMT"
 

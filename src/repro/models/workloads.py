@@ -1,8 +1,9 @@
-"""Registry of the paper's 8 workloads (Table 1)."""
+"""Registry of the paper's 8 workloads (Table 1), plus the servable
+``ChainLM`` family and the serve subsystem's family -> workload mapping."""
 
 from __future__ import annotations
 
-from .chains import BiLSTMTagger, LSTMNMT
+from .chains import BiLSTMTagger, ChainLM, LSTMNMT
 from .lattices import LatticeGRU, LatticeLSTM
 from .trees import TreeWorkload
 
@@ -13,6 +14,8 @@ def make_workload(name: str, model_size: int = 64, seed: int = 0,
         return BiLSTMTagger(model_size, seed, layout)
     if name == "LSTM-NMT":
         return LSTMNMT(model_size, seed, layout)
+    if name == "ChainLM":
+        return ChainLM(model_size, seed, layout)
     if name in ("TreeLSTM", "TreeGRU", "MV-RNN", "TreeLSTM-2Type"):
         return TreeWorkload(name, model_size, seed, layout)
     if name == "LatticeLSTM":
@@ -27,3 +30,8 @@ WORKLOADS = ["BiLSTM-Tagger", "LSTM-NMT", "TreeLSTM", "TreeGRU", "MV-RNN",
 CHAIN_WORKLOADS = ["BiLSTM-Tagger", "LSTM-NMT"]
 TREE_WORKLOADS = ["TreeLSTM", "TreeGRU", "MV-RNN", "TreeLSTM-2Type"]
 LATTICE_WORKLOADS = ["LatticeLSTM", "LatticeGRU"]
+
+# Serve subsystem: request family -> default workload. "lm" is the
+# autoregressive chain-LM decode family; "tree" and "lattice" serve
+# single-shot classifier / NER request graphs.
+SERVE_FAMILIES = {"lm": "ChainLM", "tree": "TreeLSTM", "lattice": "LatticeLSTM"}

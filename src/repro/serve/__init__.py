@@ -1,0 +1,21 @@
+"""Continuous-batching serve subsystem on compiled execution plans.
+
+- ``queue``     — admission queue + request types (lm / tree / lattice)
+- ``scheduler`` — continuous folding of arrivals into in-flight waves,
+                  wave-as-graph builders
+- ``engine``    — round-driven engine: compiled plan path, slot pools,
+                  shared FIFO caches, ``ServeStats``
+- ``registry``  — persistent FSM policy registry (content fingerprints)
+- ``traces``    — synthetic request traces (shared by launcher/example/bench)
+- ``lm_wave``   — legacy wave-by-wave TransformerLM engine (baseline)
+"""
+
+from .engine import ServeEngine, ServeStats, serve_trace
+from .queue import AdmissionQueue, ServeRequest, graph_request, lm_request
+from .registry import PolicyRegistry
+from .scheduler import ContinuousScheduler
+from .traces import synth_trace
+
+__all__ = ["ServeEngine", "ServeStats", "serve_trace", "AdmissionQueue",
+           "ServeRequest", "graph_request", "lm_request", "PolicyRegistry",
+           "ContinuousScheduler", "synth_trace"]

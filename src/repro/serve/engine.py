@@ -1,165 +1,307 @@
-"""Batched serving engine with ED-Batch request scheduling.
+"""Continuous-batching serve engine on compiled execution plans.
 
-Serving a wave of requests is itself a dynamic-batching problem: the typed
-dataflow graph has one chain per request — a PREFILL node (typed by padded
-length bucket) followed by DECODE nodes — and the engine picks which *type*
-to batch next exactly as Alg. 1 does. For chain topologies the
-sufficient-condition/FSM policies recover the optimal schedule (prefill
-buckets first, then lockstep decode waves); the depth-based baseline
-interleaves buckets and waves suboptimally, which ``ServeStats`` exposes.
+Replaces the synchronous wave-by-wave loop (now ``serve/lm_wave.py``) with a
+round-driven engine over the typed-graph executors:
 
-Decoding is continuous-batching style: one pooled cache, per-slot positions.
+- an :class:`~repro.serve.queue.AdmissionQueue` feeds a
+  :class:`~repro.serve.scheduler.ContinuousScheduler` that folds newly
+  arrived requests into in-flight waves (continuous batching) or drains
+  wave-by-wave (the baseline discipline),
+- each round's wave graph executes through the **compiled plan path**
+  (:class:`repro.core.plan.PlanExecutor`: one device dispatch per family per
+  round, arenas and AOT executables reused across waves) with the
+  interpreted :class:`repro.core.executor.DynamicExecutor` as fallback,
+- all three workload families are servable: autoregressive chain-LM decode
+  (``lm``), tree classifiers (``tree``), lattice NER (``lattice``), mapped
+  to workloads by ``repro.models.workloads.SERVE_FAMILIES``,
+- per-family batching policies come from an explicit dict, a persistent
+  :class:`~repro.serve.registry.PolicyRegistry` (auto-selected at
+  construction), or default to the sufficient-condition heuristic,
+- schedule and plan caches are **shared, FIFO-capped** objects keyed by
+  (family namespace, topology fingerprint, policy fingerprint) — one cache
+  across every family executor, so a long-running server's memory is
+  bounded by two knobs, not one dict per engine.
+
+LM recurrent state lives in a fixed slot pool threaded through executor
+``params`` (see ``models/chains.py:ChainLM``), so one AOT executable serves
+every decode round of a given (padded) width.
 """
 
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
+from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.arch.model import TransformerLM
-from repro.core.batching import (SufficientConditionPolicy, policy_cache_key,
-                                 resolve_schedule)
-from repro.core.graph import Graph, Node
+from repro.core.batching import SufficientConditionPolicy
+from repro.core.cache import FIFOCache
+from repro.core.executor import DynamicExecutor, ExecStats
+from repro.core.plan import PlanExecutor
+from repro.models.workloads import SERVE_FAMILIES, make_workload
 
-
-@dataclass
-class Request:
-    prompt: list[int]
-    max_new: int
-    out: list[int] = field(default_factory=list)
+from .queue import AdmissionQueue, ServeRequest
+from .scheduler import (ContinuousScheduler, build_lm_round_graph,
+                        merge_request_graphs)
 
 
 @dataclass
 class ServeStats:
+    """Serving metrics: throughput, batching, cache behaviour, latency."""
+
+    n_rounds: int = 0
     n_batches: int = 0
-    n_prefill_batches: int = 0
-    n_decode_batches: int = 0
+    n_launches: int = 0           # device dispatches across all families
+    tokens_out: int = 0           # lm tokens generated
+    outputs_out: int = 0          # single-shot output vectors returned
+    requests_done: int = 0
     wall_s: float = 0.0
-    schedule_s: float = 0.0      # wave-scheduling time (0 on cache hits)
+    schedule_s: float = 0.0       # Alg. 1 walks (cache misses only)
+    lower_s: float = 0.0          # plan lowering + XLA compile
+    exec_s: float = 0.0
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
     sched_cache_hits: int = 0
-    tokens_out: int = 0
+    sched_cache_misses: int = 0
+    latency_s: list[float] = field(default_factory=list)   # admit -> done
+    ttft_s: list[float] = field(default_factory=list)      # admit -> first out
 
     @property
     def tok_per_s(self) -> float:
         return self.tokens_out / max(self.wall_s, 1e-9)
 
+    def _pct(self, xs: list[float], q: float) -> float:
+        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
-def _bucket(n: int) -> int:
-    """Prefill type = exact prompt length: batches only group equal-length
-    prompts, so no pad tokens pollute the causal prefix."""
-    return n
+    def latency_percentiles(self) -> dict[str, float]:
+        return {"p50_latency_s": self._pct(self.latency_s, 50),
+                "p95_latency_s": self._pct(self.latency_s, 95),
+                "p99_latency_s": self._pct(self.latency_s, 99),
+                "p50_ttft_s": self._pct(self.ttft_s, 50),
+                "p95_ttft_s": self._pct(self.ttft_s, 95)}
 
-
-def request_graph(reqs: list[Request]) -> Graph:
-    """One chain per request: P<bucket> -> D -> D -> ..."""
-    nodes: list[Node] = []
-    for ri, r in enumerate(reqs):
-        prev = len(nodes)
-        nodes.append(Node(id=prev, type=f"P{_bucket(len(r.prompt))}",
-                          inputs=(), attrs={"req": ri}))
-        for _ in range(r.max_new - 1):
-            nid = len(nodes)
-            nodes.append(Node(id=nid, type="D", inputs=(nid - 1,),
-                              attrs={"req": ri}))
-    return Graph(nodes)
+    def as_dict(self) -> dict:
+        d = {k: v for k, v in self.__dict__.items()
+             if k not in ("latency_s", "ttft_s")}
+        d["tok_per_s"] = self.tok_per_s
+        d.update(self.latency_percentiles())
+        return d
 
 
 class ServeEngine:
-    def __init__(self, model: TransformerLM, params, cache_len: int = 256,
-                 policy=None):
-        self.model = model
-        self.params = params
-        self.cache_len = cache_len
-        self.policy = policy or SufficientConditionPolicy()
-        self._prefill_jit = jax.jit(
-            lambda p, t: model.prefill(p, t, cache_len=cache_len))
-        self._decode_jit = jax.jit(model.decode_step)
-        # Wave schedules cached per request-graph topology: recurring traffic
-        # shapes (same mix of prompt buckets and decode lengths) skip the
-        # Alg. 1 walk entirely — the serving analogue of the compiled-plan
-        # cache in core/plan.py. FIFO-capped: long-running processes see an
-        # unbounded stream of distinct wave shapes.
-        self._sched_cache: dict[tuple, list] = {}
-        self._sched_cache_max = 256
+    """Round-driven continuous-batching engine over typed request graphs.
 
-    def generate(self, prompts: list[list[int]], max_new: int = 16,
-                 greedy: bool = True, stats: ServeStats | None = None):
-        reqs = [Request(list(p), max_new) for p in prompts]
-        stats = stats if stats is not None else ServeStats()
-        t0 = time.perf_counter()
-        g = request_graph(reqs)
-        key = (g.topology_key(), policy_cache_key(self.policy))
-        sched = self._sched_cache.get(key)
-        if sched is None:
-            ts = time.perf_counter()
-            sched = resolve_schedule(g, self.policy)
-            stats.schedule_s += time.perf_counter() - ts
-            if len(self._sched_cache) >= self._sched_cache_max:
-                self._sched_cache.pop(next(iter(self._sched_cache)))
-            self._sched_cache[key] = sched
-        else:
-            stats.sched_cache_hits += 1
+    ``families`` maps family name -> workload instance (must expose
+    ``.impls``; the lm workload also ``init_slots``/``state_fields``).
+    Omitted families are built on demand from ``SERVE_FAMILIES`` with
+    ``model_size``/``seed``/``layout``.
+    """
 
-        B = len(reqs)
-        caches = None
-        pos = np.zeros(B, np.int64)
-        last_tok = np.zeros(B, np.int64)
-        slot_of = {i: i for i in range(B)}
+    def __init__(self, families: dict[str, Any] | None = None, *,
+                 compiled: bool = True, continuous: bool = True,
+                 max_slots: int = 16, model_size: int = 32, seed: int = 0,
+                 layout: str = "planned", policies: dict[str, Any] | None = None,
+                 registry: Any = None, plan_cache: FIFOCache | None = None,
+                 schedule_cache: FIFOCache | None = None, donate: bool = False,
+                 max_rounds: int = 100_000):
+        self.compiled = compiled
+        self.model_size = model_size
+        self.seed = seed
+        self.layout = layout
+        self.donate = donate
+        self.max_rounds = max_rounds
+        self.queue = AdmissionQueue()
+        self.scheduler = ContinuousScheduler(max_slots=max_slots,
+                                             continuous=continuous)
+        self.stats = ServeStats()
+        # Shared, capped caches (satellite: not per-engine dicts). Callers
+        # may pass their own to share across engines/processes of a server.
+        self.plan_cache = plan_cache if plan_cache is not None else FIFOCache(64)
+        self.schedule_cache = (schedule_cache if schedule_cache is not None
+                               else FIFOCache(512))
+        self._cache_base = (0, 0, 0, 0)
+        self._families: dict[str, Any] = dict(families or {})
+        self._policies = dict(policies or {})
+        self._registry = registry
+        self._executors: dict[str, Any] = {}
+        self._exec_stats: dict[str, ExecStats] = {}
+        self._pool: dict[str, jnp.ndarray] | None = None
+        self._now = 0.0
+        self._round = 0
 
-        for ty, ids in sched:
-            stats.n_batches += 1
-            req_ids = [g.nodes[i].attrs["req"] for i in ids]
-            if str(ty).startswith("P"):
-                stats.n_prefill_batches += 1
-                L = int(str(ty)[1:])
-                toks = np.zeros((len(req_ids), L), np.int64)
-                for j, ri in enumerate(req_ids):
-                    p = reqs[ri].prompt
-                    toks[j, L - len(p):] = p       # left-pad into the bucket
-                logits, cc = self._prefill_jit(self.params, jnp.asarray(toks))
-                nxt = np.asarray(jnp.argmax(logits, -1))
-                if caches is None:
-                    caches = self._alloc(B)
-                for j, ri in enumerate(req_ids):
-                    caches = self._copy_slot(caches, cc, slot_of[ri], j)
-                for j, ri in enumerate(req_ids):
-                    tok = int(nxt[j])
-                    reqs[ri].out.append(tok)
-                    last_tok[slot_of[ri]] = tok
-                    pos[slot_of[ri]] = L
-                    stats.tokens_out += 1
+    # -- family plumbing -----------------------------------------------------
+
+    def family(self, name: str):
+        wl = self._families.get(name)
+        if wl is None:
+            wl = make_workload(SERVE_FAMILIES[name], self.model_size,
+                               self.seed, self.layout)
+            self._families[name] = wl
+        return wl
+
+    def policy_for(self, name: str):
+        pol = self._policies.get(name)
+        if pol is None and self._registry is not None:
+            pol = self._registry.auto_select(name)
+        if pol is None:
+            pol = SufficientConditionPolicy()
+        self._policies[name] = pol
+        return pol
+
+    def _executor(self, name: str):
+        ex = self._executors.get(name)
+        if ex is None:
+            wl = self.family(name)
+            # Namespace = family + impls identity: engines sharing a cache
+            # but built around different weights must never serve each
+            # other's compiled plans (the impls dict is pinned by every
+            # cached plan, so its id cannot be recycled while entries live).
+            ns = (name, id(wl.impls))
+            if self.compiled:
+                ex = PlanExecutor(wl.impls, None, layout=self.layout,
+                                  donate=self.donate, cache=self.plan_cache,
+                                  namespace=ns)
             else:
-                stats.n_decode_batches += 1
-                logits, caches = self._decode_jit(
-                    self.params, jnp.asarray(last_tok), caches,
-                    jnp.asarray(pos))
-                nxt = np.asarray(jnp.argmax(logits, -1))
-                for ri in req_ids:
-                    s = slot_of[ri]
-                    tok = int(nxt[s])
-                    reqs[ri].out.append(tok)
-                    last_tok[s] = tok
-                    pos[s] += 1
-                    stats.tokens_out += 1
-        stats.wall_s += time.perf_counter() - t0
-        return [r.out for r in reqs], stats
+                ex = DynamicExecutor(wl.impls, None,
+                                     schedule_cache=self.schedule_cache,
+                                     namespace=ns)
+            self._executors[name] = ex
+            self._exec_stats[name] = ExecStats()
+        return ex
 
-    # -- cache plumbing ------------------------------------------------------
+    def _lm_pool(self):
+        if self._pool is None:
+            wl = self.family("lm")
+            self._pool = wl.init_slots(self.scheduler.max_slots)
+        return self._pool
 
-    def _alloc(self, B: int):
-        return self.model.init_cache(B, self.cache_len)
+    # -- request intake ------------------------------------------------------
 
-    def _copy_slot(self, pool, src, slot: int, j: int):
-        """Copy request j's prefill caches into pool slot ``slot``.
-        Cache leaves are (R, B, ...); prefill happens once per request."""
-        return jax.tree.map(lambda dst, s: dst.at[:, slot].set(s[:, j]),
-                            pool, src)
+    def submit(self, req: ServeRequest) -> ServeRequest:
+        self.queue.submit(req)
+        return req
+
+    def submit_many(self, reqs) -> None:
+        self.queue.submit_many(reqs)
+
+    # -- the serving loop ----------------------------------------------------
+
+    def run(self) -> ServeStats:
+        """Drive rounds until the queue is drained and all requests are done."""
+        t0 = time.perf_counter()
+        # Counter baselines: shared caches accumulate across engines, but
+        # this engine's stats must report only its own hits/misses —
+        # snapshotted here, not at construction, so activity by other
+        # engines between __init__ and run() is excluded too.
+        self._cache_base = (self.plan_cache.hits, self.plan_cache.misses,
+                            self.schedule_cache.hits,
+                            self.schedule_cache.misses)
+        while len(self.queue) or self.scheduler.has_work():
+            if not self.scheduler.has_work():
+                # Idle with future arrivals: fast-forward the virtual clock.
+                nxt = self.queue.earliest_arrival()
+                if nxt is not None and nxt > self._now:
+                    self._now = nxt
+            self.step()
+            if self._round > self.max_rounds:
+                raise RuntimeError(f"serve loop exceeded {self.max_rounds} "
+                                   f"rounds; requests stuck?")
+        self.stats.wall_s += time.perf_counter() - t0
+        self._fold_exec_stats()
+        return self.stats
+
+    def step(self) -> None:
+        """One scheduler round: admit, build wave graphs, execute, feed back."""
+        plan = self.scheduler.plan_round(self.queue, self._now)
+        tw = time.perf_counter()
+        for req in plan.admitted:
+            # Stamped at admission, so slot-wait shows up in latency.
+            req.admit_round = self._round
+            req.t_admit = tw
+        if not plan.empty:
+            self._run_lm_round(plan)
+            for fam, reqs in plan.singles.items():
+                self._run_single_shot(fam, reqs)
+            self.stats.n_rounds += 1
+        self._round += 1
+        self._now = max(self._now + 1.0, float(self._round))
+
+    # -- per-family round execution -----------------------------------------
+
+    def _run_lm_round(self, plan) -> None:
+        wl = self.family("lm")
+        graph = build_lm_round_graph(
+            plan, prefill_bucket_min=self.scheduler.prefill_bucket_min)
+        if graph is None:
+            return
+        ex = self._executor("lm")
+        pool = self._lm_pool()
+        res = ex.run(graph, self.policy_for("lm"), self._exec_stats["lm"],
+                     params={"slots": pool})
+        entries = [e for e in plan.prefills + plan.decodes if e.req is not None]
+        ys = np.asarray(res.field("y", [e.o_node for e in entries]))
+        toks = np.argmax(ys, axis=-1)
+        # Scatter live-request cell states back into the slot pool. Dummy
+        # pads are excluded, so their slot-0 reads are never written back.
+        cell_ids = [e.cell_node for e in entries]
+        slots = np.asarray([e.slot for e in entries], np.int32)
+        for f in wl.state_fields:
+            vals = res.field(f, cell_ids)
+            pool[f] = pool[f].at[slots].set(vals)
+        now = time.perf_counter()
+        for e, tok in zip(entries, toks):
+            req = e.req
+            if not req.out:
+                req.t_first = now
+            req.out.append(int(tok))
+            self.stats.tokens_out += 1
+            if req.done:
+                self._finish(req, now)
+
+    def _run_single_shot(self, fam: str, reqs: list[ServeRequest]) -> None:
+        if not reqs:
+            return
+        ex = self._executor(fam)
+        graph, out_ids = merge_request_graphs(reqs)
+        res = ex.run(graph, self.policy_for(fam), self._exec_stats[fam])
+        now = time.perf_counter()
+        for req, ids in zip(reqs, out_ids):
+            req.result = np.asarray(res.field("y", ids))
+            req.t_first = now
+            self.stats.outputs_out += len(ids)
+            self._finish(req, now)
+
+    def _finish(self, req: ServeRequest, now: float) -> None:
+        req.done_round = self._round
+        req.t_done = now
+        self.stats.requests_done += 1
+        self.stats.latency_s.append(now - req.t_admit)
+        self.stats.ttft_s.append(req.t_first - req.t_admit)
+        if req.family == "lm":
+            self.scheduler.release(req)
+
+    # -- stats ---------------------------------------------------------------
+
+    def _fold_exec_stats(self) -> None:
+        s = self.stats
+        s.n_batches = sum(es.n_batches for es in self._exec_stats.values())
+        s.n_launches = sum(es.n_launches for es in self._exec_stats.values())
+        s.schedule_s = sum(es.schedule_time for es in self._exec_stats.values())
+        s.exec_s = sum(es.exec_time for es in self._exec_stats.values())
+        s.lower_s = sum(es.lower_time for es in self._exec_stats.values())
+        ph, pm, sh, sm = self._cache_base
+        s.plan_cache_hits = self.plan_cache.hits - ph
+        s.plan_cache_misses = self.plan_cache.misses - pm
+        s.sched_cache_hits = self.schedule_cache.hits - sh
+        s.sched_cache_misses = self.schedule_cache.misses - sm
 
 
-def serve_wave(model, params, prompts, max_new=16, cache_len=256, policy=None):
-    eng = ServeEngine(model, params, cache_len, policy)
-    return eng.generate(prompts, max_new)
+def serve_trace(reqs, **engine_kwargs) -> tuple[list[ServeRequest], ServeStats]:
+    """Convenience one-shot: submit ``reqs``, run to completion."""
+    eng = ServeEngine(**engine_kwargs)
+    reqs = list(reqs)
+    eng.submit_many(reqs)
+    stats = eng.run()
+    return reqs, stats

@@ -1,0 +1,169 @@
+"""Legacy wave-by-wave TransformerLM serving engine (pre-subsystem).
+
+This is the original ``serve/engine.py``: a synchronous loop that drains one
+wave of requests at a time against a KV-cached :class:`TransformerLM`. It
+remains as the wave-by-wave baseline the continuous-batching subsystem
+(:mod:`repro.serve.engine`) is measured against, and as the only path that
+serves the full transformer archs from ``repro.arch``.
+
+Serving a wave of requests is itself a dynamic-batching problem: the typed
+dataflow graph has one chain per request — a PREFILL node (typed by padded
+length bucket) followed by DECODE nodes — and the engine picks which *type*
+to batch next exactly as Alg. 1 does. For chain topologies the
+sufficient-condition/FSM policies recover the optimal schedule (prefill
+buckets first, then lockstep decode waves); the depth-based baseline
+interleaves buckets and waves suboptimally, which ``ServeStats`` exposes.
+
+Decoding is continuous-batching style: one pooled cache, per-slot positions.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.arch.model import TransformerLM
+from repro.core.batching import (SufficientConditionPolicy, policy_cache_key,
+                                 resolve_schedule)
+from repro.core.cache import FIFOCache
+from repro.core.graph import Graph, Node
+
+
+@dataclass
+class Request:
+    prompt: list[int]
+    max_new: int
+    out: list[int] = field(default_factory=list)
+
+
+@dataclass
+class ServeStats:
+    n_batches: int = 0
+    n_prefill_batches: int = 0
+    n_decode_batches: int = 0
+    wall_s: float = 0.0
+    schedule_s: float = 0.0      # wave-scheduling time (0 on cache hits)
+    sched_cache_hits: int = 0
+    tokens_out: int = 0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens_out / max(self.wall_s, 1e-9)
+
+
+def _bucket(n: int) -> int:
+    """Prefill type = exact prompt length: batches only group equal-length
+    prompts, so no pad tokens pollute the causal prefix."""
+    return n
+
+
+def request_graph(reqs: list[Request]) -> Graph:
+    """One chain per request: P<bucket> -> D -> D -> ..."""
+    nodes: list[Node] = []
+    for ri, r in enumerate(reqs):
+        prev = len(nodes)
+        nodes.append(Node(id=prev, type=f"P{_bucket(len(r.prompt))}",
+                          inputs=(), attrs={"req": ri}))
+        for _ in range(r.max_new - 1):
+            nid = len(nodes)
+            nodes.append(Node(id=nid, type="D", inputs=(nid - 1,),
+                              attrs={"req": ri}))
+    return Graph(nodes)
+
+
+class ServeEngine:
+    def __init__(self, model: TransformerLM, params, cache_len: int = 256,
+                 policy=None):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self.policy = policy or SufficientConditionPolicy()
+        self._prefill_jit = jax.jit(
+            lambda p, t: model.prefill(p, t, cache_len=cache_len))
+        self._decode_jit = jax.jit(model.decode_step)
+        # Wave schedules cached per request-graph topology: recurring traffic
+        # shapes (same mix of prompt buckets and decode lengths) skip the
+        # Alg. 1 walk entirely — the serving analogue of the compiled-plan
+        # cache in core/plan.py. FIFO-capped: long-running processes see an
+        # unbounded stream of distinct wave shapes.
+        self._sched_cache = FIFOCache(256)
+
+    def generate(self, prompts: list[list[int]], max_new: int = 16,
+                 greedy: bool = True, stats: ServeStats | None = None):
+        reqs = [Request(list(p), max_new) for p in prompts]
+        stats = stats if stats is not None else ServeStats()
+        t0 = time.perf_counter()
+        g = request_graph(reqs)
+        key = (g.topology_key(), policy_cache_key(self.policy))
+        sched = self._sched_cache.get(key)
+        if sched is None:
+            ts = time.perf_counter()
+            sched = resolve_schedule(g, self.policy)
+            stats.schedule_s += time.perf_counter() - ts
+            self._sched_cache[key] = sched
+        else:
+            stats.sched_cache_hits += 1
+
+        B = len(reqs)
+        caches = None
+        pos = np.zeros(B, np.int64)
+        last_tok = np.zeros(B, np.int64)
+        slot_of = {i: i for i in range(B)}
+
+        for ty, ids in sched:
+            stats.n_batches += 1
+            req_ids = [g.nodes[i].attrs["req"] for i in ids]
+            if str(ty).startswith("P"):
+                stats.n_prefill_batches += 1
+                L = int(str(ty)[1:])
+                toks = np.zeros((len(req_ids), L), np.int64)
+                for j, ri in enumerate(req_ids):
+                    p = reqs[ri].prompt
+                    toks[j, L - len(p):] = p       # left-pad into the bucket
+                logits, cc = self._prefill_jit(self.params, jnp.asarray(toks))
+                nxt = np.asarray(jnp.argmax(logits, -1))
+                if caches is None:
+                    caches = self._alloc(B)
+                for j, ri in enumerate(req_ids):
+                    caches = self._copy_slot(caches, cc, slot_of[ri], j)
+                for j, ri in enumerate(req_ids):
+                    tok = int(nxt[j])
+                    reqs[ri].out.append(tok)
+                    last_tok[slot_of[ri]] = tok
+                    pos[slot_of[ri]] = L
+                    stats.tokens_out += 1
+            else:
+                stats.n_decode_batches += 1
+                logits, caches = self._decode_jit(
+                    self.params, jnp.asarray(last_tok), caches,
+                    jnp.asarray(pos))
+                nxt = np.asarray(jnp.argmax(logits, -1))
+                for ri in req_ids:
+                    s = slot_of[ri]
+                    tok = int(nxt[s])
+                    reqs[ri].out.append(tok)
+                    last_tok[s] = tok
+                    pos[s] += 1
+                    stats.tokens_out += 1
+        stats.wall_s += time.perf_counter() - t0
+        return [r.out for r in reqs], stats
+
+    # -- cache plumbing ------------------------------------------------------
+
+    def _alloc(self, B: int):
+        return self.model.init_cache(B, self.cache_len)
+
+    def _copy_slot(self, pool, src, slot: int, j: int):
+        """Copy request j's prefill caches into pool slot ``slot``.
+        Cache leaves are (R, B, ...); prefill happens once per request."""
+        return jax.tree.map(lambda dst, s: dst.at[:, slot].set(s[:, j]),
+                            pool, src)
+
+
+def serve_wave(model, params, prompts, max_new=16, cache_len=256, policy=None):
+    eng = ServeEngine(model, params, cache_len, policy)
+    return eng.generate(prompts, max_new)

@@ -1,0 +1,138 @@
+"""Persistent FSM policy registry: train once, serve forever.
+
+Learned :class:`~repro.core.batching.FSMPolicy` objects were ephemeral —
+keyed by identity, dead on process exit. The registry persists them as JSON
+payloads (full Q-table + state-encoding name, see
+``FSMPolicy.to_payload``) under stable **content fingerprints**::
+
+    <root>/<family>/<fingerprint>.json
+
+    {"version": 1, "family": "tree", "encoding": "sort",
+     "q": [...], "meta": {"best_batches": 38, "lower_bound": 38, ...}}
+
+The fingerprint is a sha256 over the canonical payload, so the same trained
+policy saved twice lands in the same file, and a reloaded policy's
+schedule/plan cache entries are stable across process restarts
+(``policy_cache_key`` returns the fingerprint for sealed policies).
+
+``auto_select(family)`` picks the best saved policy for a topology family —
+lowest recorded ``final_batches``-to-``lower_bound`` gap (what the
+serialized Q-table actually reproduces), fingerprint order on ties so the
+choice is deterministic — and is what the serve engine consults at
+construction time.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+from repro.core.batching import FSMPolicy, fingerprint_payload
+from repro.core.rl import RLResult
+
+REGISTRY_VERSION = 1
+
+
+@dataclass
+class RegistryEntry:
+    family: str
+    fingerprint: str
+    path: str
+    meta: dict
+
+
+class PolicyRegistry:
+    def __init__(self, root: str):
+        self.root = root
+
+    def _family_dir(self, family: str) -> str:
+        return os.path.join(self.root, family)
+
+    def save(self, family: str, policy: FSMPolicy,
+             meta: dict | None = None) -> str:
+        """Persist ``policy`` for ``family``; returns the fingerprint.
+
+        Also seals the policy (pins its content fingerprint) so subsequent
+        schedule/plan cache entries key by content, matching what a reload
+        in a fresh process will produce.
+        """
+        payload = policy.to_payload()
+        fp = fingerprint_payload(payload)
+        policy._fingerprint = fp          # seal: cache keys go content-based
+        doc = dict(payload)
+        doc["family"] = family
+        doc["meta"] = dict(meta or {})
+        d = self._family_dir(family)
+        os.makedirs(d, exist_ok=True)
+        path = os.path.join(d, f"{fp}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, path)
+        return fp
+
+    def save_result(self, family: str, result: RLResult,
+                    extra_meta: dict | None = None) -> str:
+        """Persist a ``train_fsm`` result with its training metrics."""
+        meta = {"best_batches": result.best_batches,
+                "final_batches": result.final_batches,
+                "lower_bound": result.lower_bound,
+                "reached_lower_bound": result.reached_lower_bound,
+                "iters": result.iters,
+                "train_time_s": result.train_time_s}
+        meta.update(extra_meta or {})
+        return self.save(family, result.policy, meta)
+
+    def entries(self, family: str) -> list[RegistryEntry]:
+        d = self._family_dir(family)
+        if not os.path.isdir(d):
+            return []
+        out = []
+        for fn in sorted(os.listdir(d)):
+            if not fn.endswith(".json"):
+                continue
+            path = os.path.join(d, fn)
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                continue
+            out.append(RegistryEntry(family=family,
+                                     fingerprint=fn[:-len(".json")],
+                                     path=path, meta=doc.get("meta", {})))
+        return out
+
+    def load(self, family: str, fingerprint: str) -> FSMPolicy:
+        path = os.path.join(self._family_dir(family), f"{fingerprint}.json")
+        with open(path) as f:
+            doc = json.load(f)
+        policy = FSMPolicy.from_payload(doc)
+        if policy.cache_key() != fingerprint:
+            raise ValueError(
+                f"registry file {path} fingerprint mismatch: content hashes "
+                f"to {policy.cache_key()!r}; file is corrupt or renamed")
+        return policy
+
+    def auto_select(self, family: str) -> FSMPolicy | None:
+        """Best saved policy for a family: smallest batches-over-lower-bound
+        gap (missing metrics sort last), then lexicographically latest file
+        so the choice is deterministic. Ranks by ``final_batches`` — the
+        serialized Q-table *is* the final policy, so a run whose best
+        checkpoint regressed before returning must not outrank a steadier
+        one on the strength of a checkpoint it no longer embodies."""
+        entries = self.entries(family)
+        if not entries:
+            return None
+
+        def gap(e: RegistryEntry) -> float:
+            batches = e.meta.get("final_batches", e.meta.get("best_batches"))
+            lb = e.meta.get("lower_bound")
+            return (batches - lb) if (batches is not None and lb is not None) \
+                else float("inf")
+
+        # Sort by fingerprint descending first: stable min then breaks gap
+        # ties toward the lexicographically latest entry, deterministically.
+        entries.sort(key=lambda e: e.fingerprint, reverse=True)
+        chosen = min(entries, key=gap)
+        return self.load(family, chosen.fingerprint)

@@ -1,0 +1,183 @@
+"""Continuous-batching scheduler: folds arrivals into in-flight waves.
+
+The wave-as-graph formulation: each scheduler *round* builds one typed
+dataflow graph per family containing
+
+- a **prefill chain** per newly admitted lm request (``S -> (E, C)* -> O``,
+  prompt left-padded into a power-of-two length bucket so the topology space
+  stays small),
+- a **decode fragment** per in-flight lm request (``R -> C -> O`` with an
+  ``E`` feeding the cell), reading recurrent state from the slot pool, and
+- the merged request graphs of every admitted single-shot (tree / lattice)
+  request.
+
+The batching policy (FSM / sufficient-condition / ...) then schedules that
+graph exactly as Alg. 1 schedules an offline batch — late arrivals join
+in-flight decode waves simply by appearing in the next round's graph.
+Decode fragments are padded to a power-of-two count with dummy fragments
+(slot 0, token 0, writeback discarded) so long decode phases reuse one plan
+per count bucket instead of compiling one per active-set size.
+
+In ``continuous=False`` (wave) mode admission is gated on the engine being
+idle: a wave is drained to completion before the next one is admitted —
+the legacy ``serve/lm_wave.py`` discipline, kept as the baseline that
+``benchmarks/bench_serve.py`` measures continuous batching against.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from repro.core.graph import Graph, Node
+
+from .queue import AdmissionQueue, ServeRequest
+
+SINGLE_SHOT_FAMILIES = ("tree", "lattice")
+
+
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length() if n > 0 else 0
+
+
+def bucket_len(n: int, min_bucket: int = 4) -> int:
+    """Smallest power-of-two >= n (and >= min_bucket)."""
+    return max(min_bucket, _pow2(n))
+
+
+@dataclass
+class LMEntry:
+    """One lm request's fragment in a round graph (dummy pads have req=None)."""
+
+    req: ServeRequest | None
+    slot: int
+    o_node: int = -1       # logits node (next-token argmax)
+    cell_node: int = -1    # last cell (state written back to the slot)
+
+
+@dataclass
+class RoundPlan:
+    """What one scheduler round executes, per family."""
+
+    prefills: list[LMEntry] = field(default_factory=list)
+    decodes: list[LMEntry] = field(default_factory=list)   # incl. dummy pads
+    singles: dict[str, list[ServeRequest]] = field(default_factory=dict)
+    admitted: list[ServeRequest] = field(default_factory=list)
+
+    @property
+    def empty(self) -> bool:
+        return not (self.prefills or self.decodes or self.singles)
+
+
+class ContinuousScheduler:
+    """Slot accounting + admission discipline; graph building is below."""
+
+    def __init__(self, max_slots: int = 16, continuous: bool = True,
+                 pad_decode: bool = True, prefill_bucket_min: int = 4):
+        self.max_slots = max_slots
+        self.continuous = continuous
+        self.pad_decode = pad_decode
+        self.prefill_bucket_min = prefill_bucket_min
+        self.active: list[ServeRequest] = []    # decoding next round
+        self.slot_of: dict[int, int] = {}       # rid -> slot
+        self._free = deque(range(max_slots))
+        self.waiting_lm: deque[ServeRequest] = deque()
+
+    def has_work(self) -> bool:
+        return bool(self.active or self.waiting_lm)
+
+    def plan_round(self, queue: AdmissionQueue, now: float) -> RoundPlan:
+        plan = RoundPlan()
+        # In-flight decodes first: every request admitted before this round
+        # that still owes tokens decodes once this round.
+        plan.decodes = [LMEntry(r, self.slot_of[r.rid]) for r in self.active]
+
+        # Admission: continuous mode folds arrivals into the running wave;
+        # wave mode only admits into an idle engine (drain-then-refill).
+        if self.continuous or not self.has_work():
+            for req in queue.admit(now):
+                plan.admitted.append(req)
+                if req.family == "lm":
+                    self.waiting_lm.append(req)
+                else:
+                    plan.singles.setdefault(req.family, []).append(req)
+
+        # Prefill as many waiting lm requests as there are free slots.
+        while self.waiting_lm and self._free:
+            req = self.waiting_lm.popleft()
+            slot = self._free.popleft()
+            self.slot_of[req.rid] = slot
+            self.active.append(req)
+            plan.prefills.append(LMEntry(req, slot))
+
+        # Pad the decode batch to a power-of-two count: one cached plan per
+        # count bucket instead of one per active-set size.
+        if self.pad_decode and plan.decodes:
+            target = _pow2(len(plan.decodes))
+            plan.decodes.extend(
+                LMEntry(None, 0) for _ in range(target - len(plan.decodes)))
+        return plan
+
+    def release(self, req: ServeRequest) -> None:
+        """Return a finished request's slot to the pool."""
+        slot = self.slot_of.pop(req.rid)
+        self._free.append(slot)
+        self.active = [r for r in self.active if r.rid != req.rid]
+
+
+# -- round-graph builders ----------------------------------------------------
+
+
+def build_lm_round_graph(plan: RoundPlan, *, pad_token: int = 0,
+                         prefill_bucket_min: int = 4) -> Graph | None:
+    """One typed graph for this round's lm work; fills each entry's
+    ``o_node`` / ``cell_node``. Prefill chains are emitted sorted by
+    (bucket, rid) so rounds with the same bucket multiset share a topology."""
+    if not (plan.prefills or plan.decodes):
+        return None
+    nodes: list[Node] = []
+
+    def add(type_, inputs=(), aux=0):
+        nodes.append(Node(id=len(nodes), type=type_, inputs=tuple(inputs),
+                          attrs={"aux": aux}))
+        return len(nodes) - 1
+
+    def keyfn(e: LMEntry):
+        return (bucket_len(len(e.req.prompt), prefill_bucket_min), e.req.rid)
+
+    for e in sorted(plan.prefills, key=keyfn):
+        L = bucket_len(len(e.req.prompt), prefill_bucket_min)
+        toks = [pad_token] * (L - len(e.req.prompt)) + list(e.req.prompt)
+        prev = add("S")
+        for t in toks:
+            emb = add("E", aux=t)
+            prev = add("C", (prev, emb))
+        e.cell_node = prev
+        e.o_node = add("O", (prev,))
+
+    for e in plan.decodes:
+        last_tok = e.req.out[-1] if e.req is not None else pad_token
+        r = add("R", aux=e.slot)
+        emb = add("E", aux=last_tok)
+        cell = add("C", (r, emb))
+        e.cell_node = cell
+        e.o_node = add("O", (cell,))
+    return Graph(nodes)
+
+
+def merge_request_graphs(reqs: list[ServeRequest]) -> tuple[Graph, list[list[int]]]:
+    """Fold single-shot request graphs into one wave graph (id-offset merge).
+    Returns the merged graph and, per request, its output ("O") node ids."""
+    nodes: list[Node] = []
+    out_ids: list[list[int]] = []
+    for req in reqs:
+        off = len(nodes)
+        mine: list[int] = []
+        for n in req.graph.nodes:
+            nodes.append(Node(id=n.id + off, type=n.type,
+                              inputs=tuple(p + off for p in n.inputs),
+                              op=n.op, attrs=n.attrs))
+            if n.type == "O":
+                mine.append(n.id + off)
+        out_ids.append(mine)
+    return Graph(nodes), out_ids

@@ -1,0 +1,44 @@
+"""Synthetic request traces, shared by the launcher, example, and benchmark
+so they all measure the same traffic distribution.
+
+``synth_trace`` round-robins over a family list (duplicates weight a
+family, e.g. ``["lm", "lm", "tree"]`` is 2:1 lm:tree) with arrivals at
+``i / rate`` virtual rounds — an open-loop constant-rate stream.
+"""
+
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from .queue import ServeRequest, graph_request, lm_request
+
+
+def synth_trace(families: list[str], n: int, rate: float, max_new: int,
+                workloads, seed: int = 0, *, prompt_lo: int = 3,
+                prompt_hi: int = 8, tree_leaves: tuple[int, int] = (4, 8),
+                lattice_chars: tuple[int, int] = (5, 10)
+                ) -> list[ServeRequest]:
+    rng = random.Random(seed)
+    nrng = np.random.default_rng(seed)
+    reqs: list[ServeRequest] = []
+    for i in range(n):
+        fam = families[i % len(families)]
+        arrival = i / rate
+        if fam == "lm":
+            vocab = getattr(workloads["lm"], "vocab", 256)
+            length = int(nrng.integers(prompt_lo, prompt_hi + 1))
+            prompt = list(map(int, nrng.integers(0, vocab, length)))
+            reqs.append(lm_request(prompt, max_new, arrival))
+        elif fam == "tree":
+            g = workloads["tree"].sample_graph(rng, 1, leaves_lo=tree_leaves[0],
+                                               leaves_hi=tree_leaves[1])
+            reqs.append(graph_request("tree", g, arrival))
+        elif fam == "lattice":
+            g = workloads["lattice"].sample_graph(rng, 1, lo=lattice_chars[0],
+                                                  hi=lattice_chars[1])
+            reqs.append(graph_request("lattice", g, arrival))
+        else:
+            raise ValueError(f"unknown family {fam!r}")
+    return reqs

@@ -67,7 +67,7 @@ def test_serve_engine_batches_requests():
     import jax
     import numpy as np
     from repro.arch.model import TransformerLM
-    from repro.serve.engine import ServeEngine
+    from repro.serve.lm_wave import ServeEngine
 
     cfg = get_config("qwen2-0.5b").reduced(d_model=32)
     model = TransformerLM(cfg)

@@ -1,0 +1,293 @@
+"""Serve subsystem: continuous admission, compiled-vs-interpreted
+equivalence per workload family, policy-registry round-trips, shared capped
+caches, and the RL/batching satellites (best_batches, unified tie-break)."""
+
+import random
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.batching import (FSMPolicy, _q_argmax, policy_cache_key,
+                                 schedule)
+from repro.core.cache import FIFOCache
+from repro.core.encodings import ENCODERS
+from repro.core.graph import Graph, GraphState, Node
+from repro.core.rl import RLConfig, train_fsm
+from repro.models.workloads import make_workload
+from repro.serve import (PolicyRegistry, ServeEngine, graph_request,
+                         lm_request)
+
+MODEL_SIZE = 8
+
+
+@pytest.fixture(scope="module")
+def workloads():
+    return {"lm": make_workload("ChainLM", MODEL_SIZE),
+            "tree": make_workload("TreeLSTM", MODEL_SIZE),
+            "lattice": make_workload("LatticeLSTM", MODEL_SIZE)}
+
+
+def _mixed_trace(workloads, seed=0):
+    rng = random.Random(seed)
+    nrng = np.random.default_rng(seed)
+    reqs = [lm_request(list(map(int, nrng.integers(0, 256, 4))), 3,
+                       arrival=0.0),
+            lm_request(list(map(int, nrng.integers(0, 256, 6))), 3,
+                       arrival=1.0)]
+    reqs.append(graph_request(
+        "tree", workloads["tree"].sample_graph(rng, 1, leaves_lo=3,
+                                               leaves_hi=5), arrival=0.0))
+    reqs.append(graph_request(
+        "lattice", workloads["lattice"].sample_graph(rng, 1, lo=4, hi=6),
+        arrival=1.0))
+    return reqs
+
+
+# -- continuous admission ----------------------------------------------------
+
+
+def test_late_arrival_joins_inflight_decode_wave(workloads):
+    """Continuous mode folds a round-2 arrival into request A's decode
+    phase; wave mode makes it wait for the drain."""
+    def trace():
+        return [lm_request([1, 2, 3], max_new=6, arrival=0.0),
+                lm_request([4, 5, 6, 7], max_new=3, arrival=2.0)]
+
+    eng = ServeEngine(workloads, compiled=False, continuous=True, max_slots=4)
+    a, b = trace()
+    eng.submit_many([a, b])
+    eng.run()
+    assert a.admit_round == 0 and len(a.out) == 6
+    assert b.admit_round == 2                 # admitted while A decodes...
+    assert b.admit_round < a.done_round       # ...i.e. joined in flight
+    assert b.done_round < a.done_round        # and finished first
+
+    eng = ServeEngine(workloads, compiled=False, continuous=False, max_slots=4)
+    a, b = trace()
+    eng.submit_many([a, b])
+    eng.run()
+    assert b.admit_round >= a.done_round      # wave mode drains A first
+
+
+def test_slot_backpressure(workloads):
+    """More concurrent lm requests than slots: later ones wait for a slot
+    but everything completes with its full token budget."""
+    reqs = [lm_request([i + 1, i + 2], max_new=3, arrival=0.0)
+            for i in range(4)]
+    eng = ServeEngine(workloads, compiled=False, continuous=True, max_slots=2)
+    eng.submit_many(reqs)
+    stats = eng.run()
+    assert all(len(r.out) == 3 for r in reqs)
+    assert stats.requests_done == 4
+    # with 2 slots the last pair can only start after the first frees up
+    assert max(r.done_round for r in reqs) > 3
+
+
+# -- compiled-plan path vs interpreted reference -----------------------------
+
+
+def test_plan_path_matches_interpreted_per_family(workloads):
+    """Same trace through both executors: identical tokens for lm, identical
+    logits for the single-shot families."""
+    outs = {}
+    for compiled in (False, True):
+        eng = ServeEngine(workloads, compiled=compiled, continuous=True,
+                          max_slots=4)
+        reqs = _mixed_trace(workloads)
+        eng.submit_many(reqs)
+        stats = eng.run()
+        outs[compiled] = reqs
+        if compiled:
+            # plan path: one device dispatch per family per round
+            assert stats.n_launches < stats.n_batches
+    for a, b in zip(outs[False], outs[True]):
+        assert a.family == b.family
+        if a.family == "lm":
+            assert a.out == b.out
+        else:
+            np.testing.assert_allclose(np.asarray(a.result),
+                                       np.asarray(b.result),
+                                       rtol=1e-4, atol=1e-4)
+
+
+# -- policy registry ---------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def trained_tree(workloads):
+    rng = random.Random(0)
+    graphs = [workloads["tree"].sample_graph(rng, 2, leaves_lo=3, leaves_hi=5)
+              for _ in range(3)]
+    held_out = workloads["tree"].sample_graph(rng, 2, leaves_lo=3,
+                                              leaves_hi=5)
+    res = train_fsm(graphs, RLConfig(max_iters=120, seed=0))
+    return res, held_out
+
+
+def test_registry_roundtrip_same_process(tmp_path, workloads, trained_tree):
+    res, held_out = trained_tree
+    reg = PolicyRegistry(str(tmp_path))
+    fp = reg.save_result("tree", res)
+    # saving seals the live policy: identity -> content fingerprint
+    assert policy_cache_key(res.policy) == fp
+    loaded = reg.load("tree", fp)
+    assert policy_cache_key(loaded) == fp
+    assert schedule(held_out, loaded) == schedule(held_out, res.policy)
+    # idempotent: saving again lands on the same file
+    assert reg.save("tree", res.policy) == fp
+    assert len(reg.entries("tree")) == 1
+    # auto-selection picks it up
+    auto = reg.auto_select("tree")
+    assert schedule(held_out, auto) == schedule(held_out, res.policy)
+
+
+@pytest.mark.slow
+def test_registry_roundtrip_fresh_process(tmp_path, workloads, trained_tree):
+    """The acceptance bar: train -> save -> reload in a new interpreter ->
+    identical batch count on the same graph."""
+    import os
+    res, held_out = trained_tree
+    reg = PolicyRegistry(str(tmp_path))
+    fp = reg.save_result("tree", res)
+    mem = schedule(held_out, res.policy)
+    code = (
+        "import random\n"
+        "from repro.core.batching import schedule\n"
+        "from repro.models.workloads import make_workload\n"
+        "from repro.serve import PolicyRegistry\n"
+        f"wl = make_workload('TreeLSTM', {MODEL_SIZE})\n"
+        "rng = random.Random(0)\n"
+        "for _ in range(3):\n"
+        "    wl.sample_graph(rng, 2, leaves_lo=3, leaves_hi=5)\n"
+        "g = wl.sample_graph(rng, 2, leaves_lo=3, leaves_hi=5)\n"
+        f"pol = PolicyRegistry({str(tmp_path)!r}).load('tree', {fp!r})\n"
+        "print(len(schedule(g, pol)))\n")
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert int(out.stdout.strip().splitlines()[-1]) == len(mem)
+
+
+def test_serve_time_registry_policy_reproduces_batches(tmp_path, workloads,
+                                                       trained_tree):
+    """Registry-selected policy at serve time == in-memory policy batches."""
+    res, _ = trained_tree
+    reg = PolicyRegistry(str(tmp_path))
+    reg.save_result("tree", res)
+
+    def run(**kw):
+        eng = ServeEngine(workloads, compiled=False, continuous=True, **kw)
+        rng = random.Random(7)
+        g = workloads["tree"].sample_graph(rng, 2, leaves_lo=3, leaves_hi=5)
+        eng.submit(graph_request("tree", g))
+        return eng.run()
+
+    with_reg = run(registry=reg)
+    in_mem = run(policies={"tree": res.policy})
+    assert with_reg.n_batches == in_mem.n_batches
+
+
+def test_payload_codec_and_fingerprint_stability():
+    enc = ENCODERS["sort"]
+    states = [("A", "B"), (frozenset({"A", "B"}), None),
+              ((("X",), 3), frozenset())]
+    q1 = {s: {"A": 1.0, "B": 0.5} for s in states}
+    q2 = {s: dict(reversed(list(qs.items())))       # different insertion order
+          for s, qs in reversed(list(q1.items()))}
+    p1 = FSMPolicy(q1, enc, "sort")
+    p2 = FSMPolicy(dict(q2), enc, "sort")
+    assert p1.fingerprint() == p2.fingerprint()
+    rt = FSMPolicy.from_payload(p1.to_payload())
+    assert rt.q == p1.q
+    assert rt.encoding == "sort"
+    with pytest.raises(ValueError):
+        FSMPolicy.from_payload({"version": 99, "encoding": "sort", "q": []})
+    with pytest.raises(ValueError):
+        FSMPolicy(q1, enc).to_payload()        # no encoding name
+
+
+# -- satellites: RLResult fields, unified tie-break --------------------------
+
+
+def test_rlresult_best_batches_tracks_best(workloads):
+    rng = random.Random(1)
+    graphs = [workloads["tree"].sample_graph(rng, 1, leaves_lo=3,
+                                             leaves_hi=5) for _ in range(2)]
+    res = train_fsm(graphs, RLConfig(max_iters=100, check_every=10, seed=1))
+    assert res.best_batches <= res.final_batches
+    if res.history:
+        assert res.best_batches <= min(res.history)
+    assert res.reached_lower_bound == (res.best_batches <= res.lower_bound)
+
+
+def test_transitions_tiebreak_matches_next_type():
+    g = Graph([Node(id=0, type="A"), Node(id=1, type="B")])
+    state = GraphState(g)
+    enc = ENCODERS["sort"]
+    s = enc(state)
+    # exact Q ties: both sides must resolve them identically
+    policy = FSMPolicy({s: {"A": 1.0, "B": 1.0}}, enc, "sort")
+    assert policy.transitions()[s] == policy.next_type(state)
+    policy = FSMPolicy({s: {"A": 2.0, "B": 1.0}}, enc, "sort")
+    assert policy.transitions()[s] == policy.next_type(state) == "A"
+    assert _q_argmax({}) is None
+    # valid-restriction: next_type may only pick frontier types
+    assert _q_argmax({"A": 1.0, "Z": 9.0}, valid={"A"}) == "A"
+
+
+# -- shared, capped caches ---------------------------------------------------
+
+
+def test_fifo_cache_caps_and_counts():
+    c = FIFOCache(2)
+    c["a"] = 1
+    c["b"] = 2
+    assert c.get("a") == 1 and c.hits == 1
+    c["c"] = 3                     # evicts "a" (oldest)
+    assert len(c) == 2 and "a" not in c
+    assert c.get("a") is None and c.misses == 1
+    c["b"] = 20                    # overwrite: no eviction
+    assert len(c) == 2 and c["c"] == 3
+
+
+def test_engines_share_plan_cache(workloads):
+    """Two engines handed the same cache: the second serves from the first's
+    compiled plans, and the cache stays within its cap."""
+    cache = FIFOCache(8)
+
+    def run():
+        eng = ServeEngine(workloads, compiled=True, continuous=True,
+                          max_slots=2, plan_cache=cache)
+        eng.submit(lm_request([1, 2, 3], max_new=3))
+        return eng.run()
+
+    run()
+    misses_after_first = cache.misses
+    stats2 = run()
+    assert cache.misses == misses_after_first   # pure hits on round 2
+    assert stats2.plan_cache_hits > 0
+    assert stats2.plan_cache_misses == 0        # per-engine delta, not totals
+    assert len(cache) <= cache.maxsize
+
+
+def test_shared_cache_does_not_alias_different_weights(workloads):
+    """Two engines sharing one plan cache but built around different model
+    weights must not serve each other's compiled plans."""
+    cache = FIFOCache(8)
+
+    def run(wls):
+        eng = ServeEngine(wls, compiled=True, continuous=True, max_slots=2,
+                          plan_cache=cache)
+        eng.submit(lm_request([1, 2, 3], max_new=2))
+        return eng.run()
+
+    other = dict(workloads, lm=make_workload("ChainLM", MODEL_SIZE, seed=1))
+    run(workloads)
+    misses_a = cache.misses
+    stats_b = run(other)                  # same topologies, different weights
+    assert stats_b.plan_cache_hits == 0   # no cross-weight aliasing
+    assert cache.misses > misses_a
