@@ -19,7 +19,7 @@ from repro.core.executor import DynamicExecutor, ExecStats
 from repro.core.plan import PlanExecutor
 from repro.models.workloads import make_workload
 
-from .common import emit, timeit
+from .common import add_jax_cache_arg, emit, maybe_enable_jax_cache, timeit
 
 
 def run(out: str = "", model_size: int = 64, batch_size: int = 16,
@@ -76,7 +76,9 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--no-donate", action="store_true",
                     help="disable arena donation (allocation per run)")
+    add_jax_cache_arg(ap)
     args = ap.parse_args(argv)
+    maybe_enable_jax_cache(args)
     res = run(out=args.out, model_size=args.model_size,
               batch_size=args.batch_size, donate=not args.no_donate)
     return 0 if res["speedup"] >= 2.0 else 1  # the documented acceptance bar

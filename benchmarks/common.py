@@ -6,6 +6,19 @@ from __future__ import annotations
 import time
 
 
+def add_jax_cache_arg(ap) -> None:
+    """`--jax-cache DIR`: persistent XLA compilation cache, so residual
+    per-bucket/per-topology compiles survive process restarts."""
+    ap.add_argument("--jax-cache", default="",
+                    help="persistent XLA compilation cache dir")
+
+
+def maybe_enable_jax_cache(args) -> None:
+    if getattr(args, "jax_cache", ""):
+        from repro.launch.jaxcache import enable_compilation_cache
+        enable_compilation_cache(args.jax_cache)
+
+
 def timeit(fn, *, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time per call in seconds."""
     for _ in range(warmup):

@@ -4,7 +4,7 @@ The chunked SSD algorithm: sequence split into chunks of Q steps; the
 intra-chunk part is a small masked "attention" (MXU-friendly), the
 inter-chunk part a first-order recurrence over per-chunk states carried by
 ``lax.scan``. Jamba's Mamba-1 layers are expressed in this parameterization
-too (DESIGN.md deviation #5).
+too (DESIGN.md deviation #6).
 
 Decode is O(1): a single state update per token.
 """

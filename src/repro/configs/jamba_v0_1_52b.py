@@ -2,7 +2,7 @@
 
 Hybrid: attention : Mamba = 1 : 7 (one attn layer at position 4 of each
 8-layer block), MoE (16 experts, top-2) on every other layer. Mamba layers
-use the SSD parameterization (DESIGN.md deviation #5).
+use the SSD parameterization (DESIGN.md deviation #6).
 """
 
 from repro.arch.config import ArchConfig, LayerSpec

@@ -42,3 +42,22 @@ class FIFOCache(dict):
             while len(self) >= self.maxsize:
                 super().pop(next(iter(self)))
         super().__setitem__(key, value)
+
+
+class LRUCache(FIFOCache):
+    """FIFOCache that refreshes a key's age on ``get``.
+
+    The bucketed-plan executable cache wants this: a handful of bucket
+    signatures serve an unbounded topology stream, and the hot buckets must
+    not be evicted just because they were *compiled* early. Eviction removes
+    the least-recently-*used* entry instead of the oldest-inserted one.
+    """
+
+    def get(self, key, default=None):
+        if key in self:
+            self.hits += 1
+            value = super(FIFOCache, self).pop(key)   # re-insert at the end
+            super(FIFOCache, self).__setitem__(key, value)
+            return value
+        self.misses += 1
+        return default

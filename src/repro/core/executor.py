@@ -36,21 +36,31 @@ class NodeImpl:
     arrays (one per input slot, gathered from predecessor fields);
     ``aux`` is a (k,)-int array of per-node static attributes (token ids).
     Returns dict field -> (k, *shape).
+
+    ``fused_gather`` (optional): a gather-free fast path used by the
+    bucketed plan executor — ``fused_gather(params, bufs, idxs, aux,
+    interpret=...)`` receives the *source arenas* plus per-slot row-index
+    vectors instead of pre-gathered inputs and returns the same output
+    dict, letting a Pallas kernel feed the cell math straight from the
+    arenas (see ``repro.kernels.fused_gather_cell``).
     """
 
     def __init__(self, name: str, in_slots: list[tuple[int, str]],
                  out_fields: dict[str, tuple[int, ...]],
-                 apply: Callable[..., dict[str, jnp.ndarray]]):
+                 apply: Callable[..., dict[str, jnp.ndarray]],
+                 fused_gather: Callable[..., dict[str, jnp.ndarray]] | None = None):
         self.name = name
         self.in_slots = in_slots          # (pred position, field name)
         self.out_fields = out_fields
         self.apply = apply
+        self.fused_gather = fused_gather
 
 
 @dataclass
 class ExecStats:
     n_batches: int = 0
     n_launches: int = 0          # device dispatches (1/run on the plan path)
+    n_compiles: int = 0          # distinct XLA compiles (plan paths only)
     schedule_time: float = 0.0
     exec_time: float = 0.0
     lower_time: float = 0.0      # plan lowering + XLA compile (plan path only)
@@ -109,7 +119,10 @@ class DynamicExecutor:
             params: Any = None) -> ExecResult:
         stats = stats if stats is not None else ExecStats()
         t0 = time.perf_counter()
-        key = (self._ns, graph.topology_key(), policy_cache_key(policy))
+        # "sched" tags the entry kind, so a cache shared with the compiled
+        # executors can never hand back (or be handed) the wrong artifact.
+        key = ("sched", self._ns, graph.topology_key(),
+               policy_cache_key(policy))
         sched = self._schedule_cache.get(key)
         if sched is None:
             sched = resolve_schedule(graph, policy)
@@ -187,7 +200,44 @@ def cell_impl(name: str, compiled_cell, in_slots: list[tuple[int, str]],
         return out
 
     out_fields = {o: prog.vars[o].shape for o in prog.outputs}
-    return NodeImpl(name, in_slots, out_fields, apply)
+    return NodeImpl(name, in_slots, out_fields, apply,
+                    fused_gather=_lstm_fused_gather(name, compiled_cell,
+                                                    input_names, pbuf))
+
+
+def _lstm_fused_gather(name: str, compiled_cell, input_names, pbuf):
+    """Fused gather→cell fast path for standard LSTM cells, or None.
+
+    Extracts the four gate weight blocks from the cell's packed parameter
+    buffer (wherever the PQ plan put them) into the ``(E+H, 4H)``
+    gate-blocked layout the fused kernel expects; the concat is traced, so
+    XLA folds it for baked params and keeps it differentiable for threaded
+    training params.
+    """
+    prog = compiled_cell.prog
+    if prog.name != "LSTMCell" or input_names != ["x", "h", "c"]:
+        return None
+    E = prog.vars["x"].shape[0]
+    H = prog.vars["h"].shape[0]
+    w_off = {g: compiled_cell.offsets[f"W{g}"] for g in "ifgo"}
+    b_off = {g: compiled_cell.offsets[f"b{g}"] for g in "ifgo"}
+
+    def fused_gather(params, bufs, idxs, aux, interpret=None):
+        from repro.kernels.fused_gather_cell import fused_gather_lstm_cell
+
+        buf = pbuf
+        if isinstance(params, dict) and name in params:
+            buf = params[name]
+        w = jnp.concatenate(
+            [buf[w_off[g]:w_off[g] + (E + H) * H].reshape(E + H, H)
+             for g in "ifgo"], axis=1)
+        b = jnp.concatenate([buf[b_off[g]:b_off[g] + H] for g in "ifgo"])
+        h2, c2 = fused_gather_lstm_cell(bufs[0], bufs[1], bufs[2],
+                                        idxs[0], idxs[1], idxs[2], w, b,
+                                        interpret=interpret)
+        return {"h_out": h2, "c_out": c2}
+
+    return fused_gather
 
 
 def embed_impl(name: str, table: jnp.ndarray, field_name: str = "h") -> NodeImpl:

@@ -521,6 +521,69 @@ def plan_rows(variables: Sequence[Var],
     return plan, dict(plan.offsets)
 
 
+@dataclass
+class ChunkedPlan:
+    """Result of :func:`plan_rows_chunked`."""
+
+    order: list[Var]
+    n_planned: int
+    n_erased: int
+    n_chunks: int
+    chunk_sizes: list[int] = field(default_factory=list)
+    n_skipped_chunks: int = 0    # fell back to declaration order
+
+
+def plan_rows_chunked(var_groups: Sequence[Sequence[Var]],
+                      batches: Sequence[Batch],
+                      max_vars: int) -> ChunkedPlan:
+    """Chunked joint planning for universes beyond the joint planner budget.
+
+    ED-Batch runs Alg. 2 once per *static subgraph*; the graph-level plan
+    (core/plan.py) wants one joint layout over every schedule batch, whose
+    cost grows superlinearly in the variable count. This entry splits the
+    declaration stream into contiguous chunks of at most ``max_vars``
+    variables — cutting only on group (schedule-step) boundaries, so a
+    batch's result operand always lands whole in one chunk — and plans each
+    chunk independently. A batch is a planning candidate in the unique
+    chunk containing *all* of its operand variables; batches spanning
+    chunks keep the declaration order of their variables and fall back to
+    gather/scatter at lowering, exactly like planner-erased batches.
+    """
+    chunks: list[list[Var]] = []
+    cur: list[Var] = []
+    for grp in var_groups:
+        if cur and len(cur) + len(grp) > max_vars:
+            chunks.append(cur)
+            cur = []
+        cur.extend(grp)
+    if cur:
+        chunks.append(cur)
+    order: list[Var] = []
+    planned = erased = skipped = 0
+    for vars_c in chunks:
+        if len(vars_c) > max_vars:
+            # A single oversized group (one huge batch): planning it alone
+            # would blow the budget the chunking exists to respect.
+            order.extend(vars_c)
+            skipped += 1
+            continue
+        inset = set(vars_c)
+        cand = [b for b in batches
+                if all(v in inset for op in b.operands() for v in op)]
+        try:
+            plan = plan_memory(vars_c, cand)
+            order.extend(plan.order)
+            planned += len(plan.planned)
+            erased += len(plan.erased)
+        except Exception:   # noqa: BLE001 — planner is best-effort
+            order.extend(vars_c)
+            skipped += 1
+    return ChunkedPlan(order=order, n_planned=planned, n_erased=erased,
+                       n_chunks=len(chunks),
+                       chunk_sizes=[len(c) for c in chunks],
+                       n_skipped_chunks=skipped)
+
+
 def operand_run(row_of: dict[Var, int], op: Sequence[Var]) -> int | None:
     """The start row if ``op`` reads out as one ascending contiguous run of
     rows (stride exactly +1, duplicates disallowed) — i.e. the operand lowers

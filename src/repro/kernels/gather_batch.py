@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -50,17 +51,24 @@ def gather_rows_kernel(src, idx, *, block_d: int = 512,
 def gather_rows(src, idx, *, interpret: bool = False):
     """Backend-dispatching row gather: ``src[idx]`` along axis 0.
 
-    The compiled-plan executor (core/plan.py) routes every unplanned operand
-    here. On TPU, 2-D sources with a tileable row length use the
-    scalar-prefetch Pallas kernel above; everything else (CPU/GPU backends,
-    >2-D element shapes, ragged row lengths) lowers to ``jnp.take``, which XLA
-    fuses into the surrounding single-dispatch program.
+    Both compiled-plan executors (core/plan.py) route every unplanned or
+    runtime-indexed operand here — the bucketed path's index vectors are
+    traced operands, which the scalar-prefetch kernel supports natively.
+    On TPU, sources whose flattened row length is lane-aligned use the
+    Pallas kernel (>2-D element shapes gather as flat rows and reshape
+    back); everything else (CPU/GPU backends, ragged row lengths) lowers to
+    ``jnp.take``, which XLA fuses into the surrounding single-dispatch
+    program.
     """
     idx = jnp.asarray(idx, jnp.int32)
-    D = src.shape[1] if src.ndim == 2 else 0
-    if jax.default_backend() == "tpu" and src.ndim == 2 and D % 128 == 0:
-        # Lane-aligned rows only (128 = TPU lane width); pick the largest
-        # block that still divides D so the kernel's tiling assert holds.
-        bd = 512 if D % 512 == 0 else 128
-        return gather_rows_kernel(src, idx, block_d=bd, interpret=interpret)
+    if jax.default_backend() == "tpu" and src.ndim >= 2:
+        D = int(np.prod(src.shape[1:]))
+        if D % 128 == 0:
+            # Lane-aligned rows only (128 = TPU lane width); pick the
+            # largest block that still divides D so the tiling assert holds.
+            bd = 512 if D % 512 == 0 else 128
+            flat = src.reshape(src.shape[0], D)
+            out = gather_rows_kernel(flat, idx, block_d=bd,
+                                     interpret=interpret)
+            return out.reshape((idx.shape[0],) + src.shape[1:])
     return jnp.take(src, idx, axis=0)

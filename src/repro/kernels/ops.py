@@ -14,6 +14,7 @@ import jax
 
 from .flash_attention import flash_attention_kernel
 from .fused_cell import fused_lstm_cell_kernel
+from .fused_gather_cell import fused_gather_lstm_cell_kernel
 from .gather_batch import gather_rows_kernel
 from .ssd_scan import ssd_scan_pallas
 
@@ -38,6 +39,14 @@ def fused_lstm_cell(xh, w, b, c, block_m: int = 128, block_n: int = 128,
     return fused_lstm_cell_kernel(xh, w, b, c, block_m=block_m,
                                   block_n=block_n, block_k=block_k,
                                   interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def fused_gather_lstm_cell(x_src, h_src, c_src, ix, ih, ic, w, b,
+                           interpret: bool | None = None):
+    interpret = use_interpret_default() if interpret is None else interpret
+    return fused_gather_lstm_cell_kernel(x_src, h_src, c_src, ix, ih, ic,
+                                         w, b, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("block_d", "interpret"))

@@ -35,6 +35,12 @@ def gather_rows_ref(src, idx):
     return src[idx]
 
 
+def fused_gather_lstm_cell_ref(x_src, h_src, c_src, ix, ih, ic, w, b):
+    """Gather-then-cell composition: the fused kernel must equal this."""
+    xh = jnp.concatenate([x_src[ix], h_src[ih]], axis=-1)
+    return fused_lstm_cell_ref(xh, w, b, c_src[ic])
+
+
 def ssd_scan_ref(x, dt, A, B, C):
     """Naive sequential recurrence. x: (b,l,h,p); dt: (b,l,h); A: (h,);
     B, C: (b,l,h,n) (heads already expanded)."""

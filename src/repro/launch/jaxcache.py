@@ -1,0 +1,41 @@
+"""Persistent XLA compilation cache plumbing (DESIGN.md deviation #4).
+
+Bucketed plan compilation shrinks the number of distinct XLA compiles to
+one per bucket signature — but each of those still recurs on every process
+restart. JAX's persistent compilation cache
+(``jax_compilation_cache_dir``) keeps the compiled executables on disk, so
+a restarted server or a re-run benchmark pays a cache *read* instead of a
+compile. Off by default (it writes to disk and its key includes the
+jaxlib build), enabled behind ``--jax-cache DIR`` in ``launch/serve.py``
+and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+
+def enable_compilation_cache(cache_dir: str) -> bool:
+    """Point JAX's persistent compilation cache at ``cache_dir``.
+
+    The min-compile-time/min-entry-size gates are zeroed so even the toy
+    CI-sized programs are cached — the whole point here is surviving
+    process restarts, not saving disk. Returns False (with a warning)
+    when the running jax build lacks the config knobs.
+    """
+    if not cache_dir:
+        return False
+    import jax
+
+    try:
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        try:
+            jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+            jax.config.update("jax_persistent_cache_min_entry_size_bytes", 0)
+        except AttributeError:
+            pass   # older knob names; directory alone still caches big entries
+        return True
+    except Exception as e:   # noqa: BLE001 — cache is a best-effort speedup
+        warnings.warn(f"persistent compilation cache unavailable: {e!r}",
+                      RuntimeWarning, stacklevel=2)
+        return False

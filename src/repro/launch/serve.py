@@ -118,8 +118,15 @@ def main(argv=None):
     ap.add_argument("--max-slots", type=int, default=16)
     ap.add_argument("--mode", choices=["continuous", "wave"],
                     default="continuous")
-    ap.add_argument("--plan", choices=["compiled", "interpreted"],
-                    default="compiled")
+    ap.add_argument("--plan",
+                    choices=["bucketed", "compiled", "interpreted"],
+                    default="bucketed",
+                    help="bucketed: one XLA executable per bucket signature "
+                         "(topology churn = host-side repack); compiled: one "
+                         "per topology; interpreted: reference executor")
+    ap.add_argument("--jax-cache", default="",
+                    help="persistent XLA compilation cache dir (residual "
+                         "per-bucket compiles survive process restarts)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--trace", default="", help="JSON trace file")
     ap.add_argument("--registry", default="", help="policy registry dir")
@@ -132,6 +139,10 @@ def main(argv=None):
     ap.add_argument("--checkpoint", default="",
                     help="restore TransformerLM weights (legacy path only)")
     args = ap.parse_args(argv)
+
+    if args.jax_cache:
+        from repro.launch.jaxcache import enable_compilation_cache
+        enable_compilation_cache(args.jax_cache)
 
     if args.legacy_arch:
         return legacy_wave(args.legacy_arch, args.requests, args.max_new,
@@ -155,7 +166,8 @@ def main(argv=None):
         reqs = synth_trace(families, args.requests, args.rate, args.max_new,
                            workloads, args.seed)
 
-    eng = ServeEngine(workloads, compiled=args.plan == "compiled",
+    eng = ServeEngine(workloads, compiled=args.plan != "interpreted",
+                      bucketed=args.plan == "bucketed",
                       continuous=args.mode == "continuous",
                       max_slots=args.max_slots, model_size=args.model_size,
                       seed=args.seed, registry=registry)
@@ -166,10 +178,13 @@ def main(argv=None):
     print(f"{stats.requests_done} requests ({stats.tokens_out} tokens, "
           f"{stats.outputs_out} single-shot outputs) in {stats.wall_s:.2f}s "
           f"= {stats.tok_per_s:.1f} tok/s over {stats.n_rounds} rounds")
-    print(f"batches {stats.n_batches}, device launches {stats.n_launches}; "
+    print(f"batches {stats.n_batches}, device launches {stats.n_launches}, "
+          f"XLA compiles {stats.n_compiles}; "
           f"plan cache {stats.plan_cache_hits}h/{stats.plan_cache_misses}m, "
           f"schedule cache {stats.sched_cache_hits}h/"
-          f"{stats.sched_cache_misses}m")
+          f"{stats.sched_cache_misses}m, "
+          f"bucket cache {stats.bucket_cache_hits}h/"
+          f"{stats.bucket_cache_misses}m")
     print(f"latency p50/p95/p99 {pct['p50_latency_s'] * 1e3:.0f}/"
           f"{pct['p95_latency_s'] * 1e3:.0f}/"
           f"{pct['p99_latency_s'] * 1e3:.0f} ms, "

@@ -7,10 +7,14 @@ round-driven engine over the typed-graph executors:
   :class:`~repro.serve.scheduler.ContinuousScheduler` that folds newly
   arrived requests into in-flight waves (continuous batching) or drains
   wave-by-wave (the baseline discipline),
-- each round's wave graph executes through the **compiled plan path**
-  (:class:`repro.core.plan.PlanExecutor`: one device dispatch per family per
-  round, arenas and AOT executables reused across waves) with the
-  interpreted :class:`repro.core.executor.DynamicExecutor` as fallback,
+- each round's wave graph executes through the **bucketed compiled-plan
+  path** (:class:`repro.core.plan.BucketedPlanExecutor`: one device dispatch
+  per family per round; XLA executables are cached by *bucket signature*,
+  so topology churn — new prefill-length mixes, growing decode counts —
+  costs host-side index packing instead of a recompile), with the
+  per-topology :class:`repro.core.plan.PlanExecutor` (``bucketed=False``)
+  and the interpreted :class:`repro.core.executor.DynamicExecutor`
+  (``compiled=False``) as fallbacks,
 - all three workload families are servable: autoregressive chain-LM decode
   (``lm``), tree classifiers (``tree``), lattice NER (``lattice``), mapped
   to workloads by ``repro.models.workloads.SERVE_FAMILIES``,
@@ -37,13 +41,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batching import SufficientConditionPolicy
-from repro.core.cache import FIFOCache
+from repro.core.cache import FIFOCache, LRUCache
 from repro.core.executor import DynamicExecutor, ExecStats
-from repro.core.plan import PlanExecutor
+from repro.core.plan import BucketedPlanExecutor, PlanExecutor
 from repro.models.workloads import SERVE_FAMILIES, make_workload
 
 from .queue import AdmissionQueue, ServeRequest
-from .scheduler import (ContinuousScheduler, build_lm_round_graph,
+from .scheduler import (ContinuousScheduler, bucket_len,
+                        build_lm_feed_round_graph, build_lm_round_graph,
                         merge_request_graphs)
 
 
@@ -54,6 +59,7 @@ class ServeStats:
     n_rounds: int = 0
     n_batches: int = 0
     n_launches: int = 0           # device dispatches across all families
+    n_compiles: int = 0           # distinct XLA compiles (compiled paths)
     tokens_out: int = 0           # lm tokens generated
     outputs_out: int = 0          # single-shot output vectors returned
     requests_done: int = 0
@@ -65,6 +71,8 @@ class ServeStats:
     plan_cache_misses: int = 0
     sched_cache_hits: int = 0
     sched_cache_misses: int = 0
+    bucket_cache_hits: int = 0    # bucketed path: executable-cache hits
+    bucket_cache_misses: int = 0
     latency_s: list[float] = field(default_factory=list)   # admit -> done
     ttft_s: list[float] = field(default_factory=list)      # admit -> first out
 
@@ -100,28 +108,48 @@ class ServeEngine:
     """
 
     def __init__(self, families: dict[str, Any] | None = None, *,
-                 compiled: bool = True, continuous: bool = True,
+                 compiled: bool = True, bucketed: bool = True,
+                 continuous: bool = True,
                  max_slots: int = 16, model_size: int = 32, seed: int = 0,
                  layout: str = "planned", policies: dict[str, Any] | None = None,
                  registry: Any = None, plan_cache: FIFOCache | None = None,
-                 schedule_cache: FIFOCache | None = None, donate: bool = False,
+                 schedule_cache: FIFOCache | None = None,
+                 bucket_cache: FIFOCache | None = None,
+                 bucket_ladder: tuple[int, ...] | None = (8,),
+                 donate: bool = False,
                  max_rounds: int = 100_000):
         self.compiled = compiled
+        self.bucketed = bucketed
+        # Serving widths bucket with a floor (default 8): decode counts 1..8
+        # and single-chain cell batches all land on one rung, so a server's
+        # whole decode phase shares one executable. Past the floor the
+        # ladder falls back to powers of two.
+        self.bucket_ladder = bucket_ladder
         self.model_size = model_size
         self.seed = seed
         self.layout = layout
         self.donate = donate
         self.max_rounds = max_rounds
         self.queue = AdmissionQueue()
-        self.scheduler = ContinuousScheduler(max_slots=max_slots,
-                                             continuous=continuous)
+        # The feed-graph path pads the *total* entry count itself, so the
+        # scheduler's decode-count padding would only compound (dummy
+        # fragments padded again on top of dummies).
+        self.scheduler = ContinuousScheduler(
+            max_slots=max_slots, continuous=continuous,
+            pad_decode=not (compiled and bucketed))
         self.stats = ServeStats()
         # Shared, capped caches (satellite: not per-engine dicts). Callers
         # may pass their own to share across engines/processes of a server.
+        # On the bucketed path ``plan_cache`` holds host-side topology packs
+        # (cheap) and ``bucket_cache`` holds the XLA executables, keyed by
+        # bucket signature — the expensive entries, LRU-kept so hot buckets
+        # survive topology churn.
         self.plan_cache = plan_cache if plan_cache is not None else FIFOCache(64)
         self.schedule_cache = (schedule_cache if schedule_cache is not None
                                else FIFOCache(512))
-        self._cache_base = (0, 0, 0, 0)
+        self.bucket_cache = (bucket_cache if bucket_cache is not None
+                             else LRUCache(32))
+        self._cache_base = (0, 0, 0, 0, 0, 0)
         self._families: dict[str, Any] = dict(families or {})
         self._policies = dict(policies or {})
         self._registry = registry
@@ -156,10 +184,18 @@ class ServeEngine:
             wl = self.family(name)
             # Namespace = family + impls identity: engines sharing a cache
             # but built around different weights must never serve each
-            # other's compiled plans (the impls dict is pinned by every
-            # cached plan, so its id cannot be recycled while entries live).
+            # other's compiled plans. Every cached artifact (CompiledPlan,
+            # BucketedPack, bucket-executable entry) pins the impls dict,
+            # so its id cannot be recycled while entries live.
             ns = (name, id(wl.impls))
-            if self.compiled:
+            if self.compiled and self.bucketed:
+                ex = BucketedPlanExecutor(wl.impls, None, layout=self.layout,
+                                          donate=self.donate,
+                                          ladder=self.bucket_ladder,
+                                          pack_cache=self.plan_cache,
+                                          exe_cache=self.bucket_cache,
+                                          namespace=ns)
+            elif self.compiled:
                 ex = PlanExecutor(wl.impls, None, layout=self.layout,
                                   donate=self.donate, cache=self.plan_cache,
                                   namespace=ns)
@@ -197,7 +233,9 @@ class ServeEngine:
         # engines between __init__ and run() is excluded too.
         self._cache_base = (self.plan_cache.hits, self.plan_cache.misses,
                             self.schedule_cache.hits,
-                            self.schedule_cache.misses)
+                            self.schedule_cache.misses,
+                            self.bucket_cache.hits,
+                            self.bucket_cache.misses)
         while len(self.queue) or self.scheduler.has_work():
             if not self.scheduler.has_work():
                 # Idle with future arrivals: fast-forward the virtual clock.
@@ -232,15 +270,32 @@ class ServeEngine:
 
     def _run_lm_round(self, plan) -> None:
         wl = self.family("lm")
-        graph = build_lm_round_graph(
-            plan, prefill_bucket_min=self.scheduler.prefill_bucket_min)
+        pool = self._lm_pool()
+        if self.compiled and self.bucketed:
+            # Token-level (iteration) scheduling: fresh requests zero their
+            # slot and feed the padded prompt one token per round through
+            # the same decode fragment every request uses — the round
+            # topology depends only on the padded entry count, so the whole
+            # lm lifetime runs through one or two bucketed executables.
+            for e in plan.prefills:
+                req = e.req
+                Lb = bucket_len(len(req.prompt),
+                                self.scheduler.prefill_bucket_min)
+                req.feed = ([0] * (Lb - len(req.prompt)) + list(req.prompt))
+                req.n_fed = 0
+                for f in wl.state_fields:
+                    pool[f] = pool[f].at[e.slot].set(0.0)
+            graph, entries = build_lm_feed_round_graph(plan)
+        else:
+            graph = build_lm_round_graph(
+                plan, prefill_bucket_min=self.scheduler.prefill_bucket_min)
+            entries = [e for e in plan.prefills + plan.decodes
+                       if e.req is not None]
         if graph is None:
             return
         ex = self._executor("lm")
-        pool = self._lm_pool()
         res = ex.run(graph, self.policy_for("lm"), self._exec_stats["lm"],
                      params={"slots": pool})
-        entries = [e for e in plan.prefills + plan.decodes if e.req is not None]
         ys = np.asarray(res.field("y", [e.o_node for e in entries]))
         toks = np.argmax(ys, axis=-1)
         # Scatter live-request cell states back into the slot pool. Dummy
@@ -253,6 +308,12 @@ class ServeEngine:
         now = time.perf_counter()
         for e, tok in zip(entries, toks):
             req = e.req
+            if req.feed is not None and req.n_fed < len(req.feed):
+                # Prefill round: logits only matter after the last prompt
+                # token has been fed.
+                req.n_fed += 1
+                if req.n_fed < len(req.feed):
+                    continue
             if not req.out:
                 req.t_first = now
             req.out.append(int(tok))
@@ -288,14 +349,17 @@ class ServeEngine:
         s = self.stats
         s.n_batches = sum(es.n_batches for es in self._exec_stats.values())
         s.n_launches = sum(es.n_launches for es in self._exec_stats.values())
+        s.n_compiles = sum(es.n_compiles for es in self._exec_stats.values())
         s.schedule_s = sum(es.schedule_time for es in self._exec_stats.values())
         s.exec_s = sum(es.exec_time for es in self._exec_stats.values())
         s.lower_s = sum(es.lower_time for es in self._exec_stats.values())
-        ph, pm, sh, sm = self._cache_base
+        ph, pm, sh, sm, bh, bm = self._cache_base
         s.plan_cache_hits = self.plan_cache.hits - ph
         s.plan_cache_misses = self.plan_cache.misses - pm
         s.sched_cache_hits = self.schedule_cache.hits - sh
         s.sched_cache_misses = self.schedule_cache.misses - sm
+        s.bucket_cache_hits = self.bucket_cache.hits - bh
+        s.bucket_cache_misses = self.bucket_cache.misses - bm
 
 
 def serve_trace(reqs, **engine_kwargs) -> tuple[list[ServeRequest], ServeStats]:

@@ -41,6 +41,8 @@ class ServeRequest:
 
     # engine-filled progress / results
     out: list[int] = field(default_factory=list)   # lm: generated tokens
+    feed: list[int] | None = None      # lm, bucketed path: padded prompt
+    n_fed: int = 0                     # ... tokens already fed through
     result: Any = None                 # tree / lattice: stacked O-node logits
     admit_round: int = -1
     done_round: int = -1

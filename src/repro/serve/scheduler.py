@@ -14,9 +14,15 @@ dataflow graph per family containing
 The batching policy (FSM / sufficient-condition / ...) then schedules that
 graph exactly as Alg. 1 schedules an offline batch — late arrivals join
 in-flight decode waves simply by appearing in the next round's graph.
-Decode fragments are padded to a power-of-two count with dummy fragments
+Decode fragments are padded to a bucketed count with dummy fragments
 (slot 0, token 0, writeback discarded) so long decode phases reuse one plan
 per count bucket instead of compiling one per active-set size.
+
+The bucketed engine path uses :func:`build_lm_feed_round_graph` instead:
+token-level (iteration) scheduling where prefilling requests feed their
+padded prompt through the same decode fragment one token per round, so
+round topology depends only on the padded entry count and the whole lm
+lifetime shares one or two bucketed executables (DESIGN.md deviation #4).
 
 In ``continuous=False`` (wave) mode admission is gated on the engine being
 idle: a wave is drained to completion before the next one is admitted —
@@ -30,19 +36,22 @@ from collections import deque
 from dataclasses import dataclass, field
 
 from repro.core.graph import Graph, Node
+from repro.core.plan import bucket_up
 
 from .queue import AdmissionQueue, ServeRequest
 
 SINGLE_SHOT_FAMILIES = ("tree", "lattice")
 
 
-def _pow2(n: int) -> int:
-    return 1 << (n - 1).bit_length() if n > 0 else 0
+def bucket_len(n: int, min_bucket: int = 4,
+               ladder: tuple[int, ...] | None = None) -> int:
+    """Smallest bucket >= n (and >= min_bucket) on the shared plan ladder.
 
-
-def bucket_len(n: int, min_bucket: int = 4) -> int:
-    """Smallest power-of-two >= n (and >= min_bucket)."""
-    return max(min_bucket, _pow2(n))
+    Prompt-length bucketing and the bucketed plan compiler
+    (``core.plan.bucket_up``) must agree on one ladder: the scheduler's
+    buckets decide which round topologies exist, the plan layer's buckets
+    decide which of those share an executable."""
+    return max(min_bucket, bucket_up(n, ladder)) if n > 0 else min_bucket
 
 
 @dataclass
@@ -110,10 +119,12 @@ class ContinuousScheduler:
             self.active.append(req)
             plan.prefills.append(LMEntry(req, slot))
 
-        # Pad the decode batch to a power-of-two count: one cached plan per
-        # count bucket instead of one per active-set size.
+        # Pad the decode batch to a bucketed count: one cached plan per
+        # count bucket instead of one per active-set size. (The bucketed
+        # plan compiler additionally pads batch *widths*, so this graph-level
+        # padding mainly keeps the per-topology pack cache small.)
         if self.pad_decode and plan.decodes:
-            target = _pow2(len(plan.decodes))
+            target = bucket_up(len(plan.decodes))
             plan.decodes.extend(
                 LMEntry(None, 0) for _ in range(target - len(plan.decodes)))
         return plan
@@ -163,6 +174,57 @@ def build_lm_round_graph(plan: RoundPlan, *, pad_token: int = 0,
         e.cell_node = cell
         e.o_node = add("O", (cell,))
     return Graph(nodes)
+
+
+def next_feed_token(req: ServeRequest, pad_token: int = 0) -> int:
+    """The token a request feeds this round: the next (padded) prompt token
+    while prefilling, else the argmax of its last logits."""
+    feed = req.feed or []
+    if req.n_fed < len(feed):
+        return feed[req.n_fed]
+    return req.out[-1] if req.out else pad_token
+
+
+def build_lm_feed_round_graph(plan: RoundPlan, *, pad_token: int = 0,
+                              count_bucket_min: int = 8
+                              ) -> tuple[Graph | None, list[LMEntry]]:
+    """Token-level round graph (the bucketed engine's lm formulation).
+
+    Every live request — freshly admitted or mid-decode — contributes the
+    same ``R -> C -> O`` fragment; a prefilling request's ``E`` carries its
+    next padded-prompt token instead of a generated one (iteration-level /
+    Orca-style scheduling). Feeding the padded prompt through the decode
+    cell one token per round computes bit-identical state to the merged
+    prefill chain, because both run the same cell over the same padded
+    token sequence from a zero state.
+
+    The payoff is the executable-signature space: round topology depends on
+    nothing but the padded entry count, so with the serve width ladder the
+    whole lm lifetime — any prompt-length mix, any decode phase — runs
+    through one or two bucketed executables. Entry count pads to
+    ``count_bucket_min`` with dummy fragments (slot 0, token 0, writeback
+    discarded), which also keeps the per-topology pack cache tiny."""
+    live = plan.prefills + plan.decodes
+    if not live:
+        return None, []
+    entries = live + [LMEntry(None, 0) for _ in range(
+        bucket_len(len(live), count_bucket_min) - len(live))]
+    nodes: list[Node] = []
+
+    def add(type_, inputs=(), aux=0):
+        nodes.append(Node(id=len(nodes), type=type_, inputs=tuple(inputs),
+                          attrs={"aux": aux}))
+        return len(nodes) - 1
+
+    for e in entries:
+        tok = (next_feed_token(e.req, pad_token) if e.req is not None
+               else pad_token)
+        r = add("R", aux=e.slot)
+        emb = add("E", aux=tok)
+        cell = add("C", (r, emb))
+        e.cell_node = cell
+        e.o_node = add("O", (cell,))
+    return Graph(nodes), [e for e in entries if e.req is not None]
 
 
 def merge_request_graphs(reqs: list[ServeRequest]) -> tuple[Graph, list[list[int]]]:

@@ -1,0 +1,255 @@
+"""Bucketed plan families (core/plan.py, DESIGN.md deviation #4): padding
+equivalence against the interpreted reference on chain/tree/lattice,
+bucket-boundary and masked-tail topologies, executable sharing across
+topologies, the fused gather→cell path, chunked PQ planning, and the
+PQ-skip warning satellite."""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.batching import SufficientConditionPolicy
+from repro.core.cache import LRUCache
+from repro.core.executor import DynamicExecutor, ExecStats
+from repro.core.graph import Graph, Node
+from repro.core.plan import (BucketedPlanExecutor, PlanExecutor, bucket_up,
+                             lower_schedule, pack_bucketed)
+from repro.models.workloads import make_workload
+
+POLICY = SufficientConditionPolicy()
+
+WORKLOAD_ARGS = {
+    "BiLSTM-Tagger": dict(lo=4, hi=8),
+    "TreeLSTM": dict(leaves_lo=4, leaves_hi=6),
+    "LatticeLSTM": dict(lo=6, hi=10),
+}
+
+
+@pytest.fixture(scope="module")
+def setups():
+    out = {}
+    for name, args in WORKLOAD_ARGS.items():
+        rng = random.Random(0)
+        wl = make_workload(name, model_size=8)
+        out[name] = (wl, wl.sample_graph(rng, 2, **args))
+    return out
+
+
+def assert_results_equal(graph, ref, res, rtol=1e-5, atol=1e-5):
+    for n in graph.nodes:
+        a, b = ref.node(n.id), res.node(n.id)
+        assert a.keys() == b.keys()
+        for f in a:
+            np.testing.assert_allclose(
+                np.asarray(a[f]), np.asarray(b[f]), rtol=rtol, atol=atol,
+                err_msg=f"node {n.id} ({graph.nodes[n.id].type}) field {f}")
+
+
+def test_bucket_up_ladder():
+    assert [bucket_up(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    # a ladder's first rung is a floor; past the top it falls back to pow2
+    assert bucket_up(1, (8,)) == 8
+    assert bucket_up(8, (8,)) == 8
+    assert bucket_up(9, (8,)) == 16
+    assert bucket_up(3, (4, 12)) == 4
+    assert bucket_up(5, (4, 12)) == 12
+
+
+@pytest.mark.parametrize("name", list(WORKLOAD_ARGS))
+def test_bucketed_matches_interpreted(setups, name):
+    wl, g = setups[name]
+    ref = DynamicExecutor(wl.impls, None).run(g, POLICY)
+    stats = ExecStats()
+    res = BucketedPlanExecutor(wl.impls, None).run(g, POLICY, stats)
+    assert stats.n_launches == 1
+    assert stats.n_compiles == 1
+    assert_results_equal(g, ref, res)
+
+
+def _chain_graph(wl, lengths):
+    """ChainLM offline chains with exact per-chain lengths."""
+    nodes = []
+
+    def add(type_, inputs=(), aux=0):
+        nodes.append(Node(id=len(nodes), type=type_, inputs=tuple(inputs),
+                          attrs={"aux": aux}))
+        return len(nodes) - 1
+
+    rng = random.Random(0)
+    for L in lengths:
+        prev = add("S")
+        for _ in range(L):
+            e = add("E", aux=rng.randrange(wl.vocab))
+            prev = add("C", (prev, e))
+            add("O", (prev,))
+    return Graph(nodes)
+
+
+@pytest.mark.parametrize("lengths", [
+    (4,),          # bucket boundary: widths and runs sit exactly on rungs
+    (5,),          # masked tail: one lane past the boundary pads
+    (4, 7),        # mixed widths inside one graph
+])
+def test_boundary_and_masked_tail(lengths):
+    wl = make_workload("ChainLM", 8)
+    g = _chain_graph(wl, lengths)
+    ref = DynamicExecutor(wl.impls, None).run(g, POLICY)
+    ex = BucketedPlanExecutor(wl.impls, None)
+    res = ex.run(g, POLICY)
+    assert_results_equal(g, ref, res)
+    pack = ex.pack_for(g, POLICY)
+    if lengths == (4,):
+        # run lengths 1/4/... and widths 1 are already rungs: no padding
+        assert pack.stats.n_pad_steps == 0
+    if lengths == (5,):
+        assert pack.stats.n_pad_steps > 0      # C-run 5 pads to 8
+
+
+def test_topologies_share_bucket_executable():
+    """The tentpole property: distinct topologies in one bucket run through
+    one compiled executable — per-topology work is host-side packing."""
+    wl = make_workload("ChainLM", 8)
+    ex = BucketedPlanExecutor(wl.impls, None)
+    stats = ExecStats()
+    for L in (5, 6, 7):     # same padded spec (runs pad 8, widths match)
+        g = _chain_graph(wl, (L,))
+        ref = DynamicExecutor(wl.impls, None).run(g, POLICY)
+        assert_results_equal(g, ref, ex.run(g, POLICY, stats))
+    assert ex.n_bucket_compiles == 1
+    assert stats.n_compiles == 1
+    assert len(ex._packs) == 3      # one host-side pack per topology
+
+
+def test_bucketed_aux_only_reruns_share_pack():
+    """Same topology, different token ids: one pack, one executable, fresh
+    aux operands per run."""
+    wl = make_workload("ChainLM", 8)
+    g1 = _chain_graph(wl, (5,))
+    g2 = Graph([Node(id=n.id, type=n.type, inputs=n.inputs,
+                     attrs={"aux": (n.attrs.get("aux", 0) * 3 + 1) % wl.vocab})
+                for n in g1.nodes])
+    ex = BucketedPlanExecutor(wl.impls, None)
+    ex.run(g1, POLICY)
+    res2 = ex.run(g2, POLICY)
+    assert len(ex._packs) == 1 and ex.n_bucket_compiles == 1
+    assert_results_equal(g2, DynamicExecutor(wl.impls, None).run(g2, POLICY),
+                         res2)
+
+
+def test_width_ladder_floor_merges_small_batches():
+    wl = make_workload("ChainLM", 8)
+    ex = BucketedPlanExecutor(wl.impls, None, ladder=(8,))
+    for lengths in ((3,), (2, 2)):       # 1-wide vs 2-wide cell batches
+        g = _chain_graph(wl, lengths)
+        assert_results_equal(
+            g, DynamicExecutor(wl.impls, None).run(g, POLICY),
+            ex.run(g, POLICY))
+    # every width lands on the 8-rung; only step counts could differ
+    widths = {s.width for key in ex._exes for s in key[1].steps}
+    assert widths == {8}
+
+
+def test_bucketed_donate_matches(setups):
+    wl, g = setups["TreeLSTM"]
+    ex = BucketedPlanExecutor(wl.impls, None, donate=True)
+    ex.run(g, POLICY)                  # donated pool now holds run 1
+    res = ex.run(g, POLICY)            # run 2 reuses the buffers in place
+    ref = DynamicExecutor(wl.impls, None).run(g, POLICY)
+    assert_results_equal(g, ref, res)
+
+
+def test_fused_gather_cell_path(setups):
+    """fused=True routes LSTM cell steps through the fused gather→cell
+    kernel (jnp fallback and Pallas interpret) with matching outputs."""
+    wl = make_workload("ChainLM", 8)
+    g = _chain_graph(wl, (4, 6))
+    ref = DynamicExecutor(wl.impls, None).run(g, POLICY)
+    assert wl.impls["C"].fused_gather is not None
+    for kw in (dict(fused=True),                        # jnp fallback (CPU)
+               dict(fused=True, fused_interpret=True)):  # Pallas interpret
+        res = BucketedPlanExecutor(wl.impls, None, **kw).run(g, POLICY)
+        assert_results_equal(g, ref, res, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_gather_respects_threaded_params(setups):
+    """Training-style threaded params override the baked weight buffer on
+    the fused path too."""
+    wl = make_workload("ChainLM", 8)
+    g = _chain_graph(wl, (4,))
+    pbuf = wl.cells["LSTMCell"].init_params(np.random.default_rng(7))
+    params = {"C": pbuf}
+    ref = DynamicExecutor(wl.impls, None).run(g, POLICY, params=params)
+    res = BucketedPlanExecutor(wl.impls, None, fused=True).run(
+        g, POLICY, params=params)
+    assert_results_equal(g, ref, res, rtol=1e-4, atol=1e-4)
+
+
+# -- PQ scaling satellites ---------------------------------------------------
+
+
+def test_chunked_pq_plans_large_universe():
+    """Past max_pq_vars the planner chunks instead of silently skipping:
+    n_pq_planned_batches > 0 and the outputs still match."""
+    wl = make_workload("ChainLM", 8)
+    g = _chain_graph(wl, (6, 6, 6))
+    ex = PlanExecutor(wl.impls, None, max_pq_vars=24)
+    res = ex.run(g, POLICY)
+    st = ex.plan_for(g, POLICY).stats
+    assert st.layout == "pq-chunked"
+    assert st.n_pq_chunks > 1
+    assert st.n_pq_planned_batches > 0
+    assert st.pq_skipped == ""
+    assert_results_equal(g, DynamicExecutor(wl.impls, None).run(g, POLICY),
+                         res)
+
+
+def test_pq_skip_is_visible_not_silent():
+    """With chunking disabled, exceeding max_pq_vars must flag PlanStats
+    and warn instead of silently reporting n_pq_planned_batches == 0."""
+    wl = make_workload("ChainLM", 8)
+    g = _chain_graph(wl, (6,))
+    sched_args = dict(layout="planned", max_pq_vars=4, pq_chunk=False)
+    from repro.core.batching import resolve_schedule
+    sched = resolve_schedule(g, POLICY)
+    with pytest.warns(RuntimeWarning, match="PQ memory planning skipped"):
+        low = lower_schedule(g, sched, wl.impls, **sched_args)
+    assert low.stats.pq_skipped != ""
+    assert low.stats.layout == "schedule"
+    assert low.stats.n_pq_planned_batches == 0
+
+
+def test_pack_bucketed_pads_reads_and_trash_writes():
+    """Index-packing invariants: pad read lanes replicate the last real
+    lane, pad write lanes target the reserved trash row."""
+    wl = make_workload("ChainLM", 8)
+    g = _chain_graph(wl, (5,))
+    from repro.core.batching import resolve_schedule
+    low = lower_schedule(g, resolve_schedule(g, POLICY), wl.impls)
+    pack = pack_bucketed(low)
+    rows_p = dict(pack.spec.arena_rows)
+    # every arena got a trash row outside its real rows
+    for key, rows in low.arena_rows.items():
+        assert rows_p[key] == bucket_up(rows) + 1
+    idx = np.asarray(pack.idxpack)
+    off = 0
+    for bs in pack.spec.steps:
+        for _ in bs.in_arenas:
+            off += bs.width
+        for _, key in bs.out_arenas:
+            lanes = idx[off:off + bs.width]
+            real = lanes[lanes != rows_p[key] - 1]
+            assert len(set(real.tolist())) == len(real)   # real rows unique
+            assert (lanes < rows_p[key]).all()
+            off += bs.width
+    assert off == idx.size
+
+
+def test_lru_cache_refreshes_on_get():
+    c = LRUCache(2)
+    c["a"] = 1
+    c["b"] = 2
+    assert c.get("a") == 1        # refresh "a": now "b" is the LRU entry
+    c["c"] = 3                    # evicts "b", not "a"
+    assert "a" in c and "b" not in c
+    assert c.get("b") is None and c.misses == 1

@@ -57,6 +57,60 @@ def test_fused_lstm_cell_shapes(B, K, H, bm, bn, bk, nprng):
     np.testing.assert_allclose(c2, cr, rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.parametrize("B,E,H", [(4, 8, 16), (7, 16, 16), (16, 32, 8)])
+def test_fused_gather_lstm_cell_shapes(B, E, H, nprng):
+    Nx, Nh = 3 * B, 2 * B
+    x_src = jnp.asarray(nprng.standard_normal((Nx, E)), jnp.float32)
+    h_src = jnp.asarray(nprng.standard_normal((Nh, H)), jnp.float32)
+    c_src = jnp.asarray(nprng.standard_normal((Nh, H)), jnp.float32)
+    ix = jnp.asarray(nprng.integers(0, Nx, B), jnp.int32)
+    ih = jnp.asarray(nprng.integers(0, Nh, B), jnp.int32)
+    ic = jnp.asarray(nprng.integers(0, Nh, B), jnp.int32)
+    w = jnp.asarray(0.1 * nprng.standard_normal((E + H, 4 * H)), jnp.float32)
+    b = jnp.asarray(0.1 * nprng.standard_normal(4 * H), jnp.float32)
+    h2, c2 = ops.fused_gather_lstm_cell(x_src, h_src, c_src, ix, ih, ic, w, b)
+    hr, cr = ref.fused_gather_lstm_cell_ref(x_src, h_src, c_src, ix, ih, ic,
+                                            w, b)
+    np.testing.assert_allclose(h2, hr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(c2, cr, rtol=3e-4, atol=3e-4)
+
+
+def test_fused_gather_lstm_cell_duplicate_and_pad_lanes(nprng):
+    """Duplicate indices (broadcast-as-gather and replicated pad lanes) are
+    the bucketed executor's bread and butter."""
+    B, E, H = 6, 8, 8
+    x_src = jnp.asarray(nprng.standard_normal((4, E)), jnp.float32)
+    h_src = jnp.asarray(nprng.standard_normal((4, H)), jnp.float32)
+    c_src = jnp.asarray(nprng.standard_normal((4, H)), jnp.float32)
+    ix = jnp.asarray([0, 0, 0, 3, 3, 3], jnp.int32)
+    ih = jnp.asarray([1, 1, 2, 2, 3, 3], jnp.int32)
+    ic = jnp.asarray([0, 1, 2, 3, 3, 3], jnp.int32)
+    w = jnp.asarray(0.1 * nprng.standard_normal((E + H, 4 * H)), jnp.float32)
+    b = jnp.zeros(4 * H, jnp.float32)
+    h2, c2 = ops.fused_gather_lstm_cell(x_src, h_src, c_src, ix, ih, ic, w, b)
+    hr, cr = ref.fused_gather_lstm_cell_ref(x_src, h_src, c_src, ix, ih, ic,
+                                            w, b)
+    np.testing.assert_allclose(h2, hr, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(c2, cr, rtol=3e-4, atol=3e-4)
+
+
+def test_fused_gather_matches_gather_then_fused_cell(nprng):
+    """Composition identity: fused(gather, cell) == cell(gather)."""
+    B, E, H = 8, 16, 16
+    src = jnp.asarray(nprng.standard_normal((2 * B, E)), jnp.float32)
+    hs = jnp.asarray(nprng.standard_normal((2 * B, H)), jnp.float32)
+    cs = jnp.asarray(nprng.standard_normal((2 * B, H)), jnp.float32)
+    idx = jnp.asarray(nprng.integers(0, 2 * B, B), jnp.int32)
+    w = jnp.asarray(0.1 * nprng.standard_normal((E + H, 4 * H)), jnp.float32)
+    b = jnp.asarray(0.1 * nprng.standard_normal(4 * H), jnp.float32)
+    h2, c2 = ops.fused_gather_lstm_cell(src, hs, cs, idx, idx, idx, w, b)
+    xh = jnp.concatenate([src[idx], hs[idx]], axis=-1)
+    h3, c3 = ops.fused_lstm_cell(xh, w, b, cs[idx], block_m=B, block_n=H,
+                                 block_k=E + H)
+    np.testing.assert_allclose(h2, h3, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(c2, c3, rtol=3e-4, atol=3e-4)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000), n=st.sampled_from([8, 32, 64]),
        d=st.sampled_from([16, 32]), k=st.integers(1, 16))
