@@ -43,7 +43,8 @@ from repro.core.plan import BucketedPlanExecutor
 from repro.models.workloads import make_workload
 from repro.serve import ServeEngine, lm_request
 
-from .common import add_jax_cache_arg, emit, maybe_enable_jax_cache
+from .common import (add_jax_cache_arg, emit, maybe_enable_jax_cache,
+                     platform_payload)
 
 # Prompt lengths deliberately straddle several scheduler buckets (4, 8, 16,
 # 32) and generation budgets vary, so the round-topology stream churns.
@@ -96,7 +97,8 @@ def run(out: str = "", model_size: int = 16, requests: int = 10,
         modes: tuple[str, ...] = ("interpreted", "per_topology", "bucketed"),
         ) -> dict:
     workloads = {"lm": make_workload("ChainLM", model_size, seed)}
-    result: dict = {"model_size": model_size, "requests": requests,
+    result: dict = {**platform_payload(),
+                    "model_size": model_size, "requests": requests,
                     "rate": rate, "max_slots": max_slots,
                     "prompt_lengths": list(PROMPT_LENGTHS)}
 

@@ -19,7 +19,8 @@ from repro.core.executor import DynamicExecutor, ExecStats
 from repro.core.plan import PlanExecutor
 from repro.models.workloads import make_workload
 
-from .common import add_jax_cache_arg, emit, maybe_enable_jax_cache, timeit
+from .common import (add_jax_cache_arg, emit, maybe_enable_jax_cache,
+                     platform_payload, timeit)
 
 
 def run(out: str = "", model_size: int = 64, batch_size: int = 16,
@@ -42,6 +43,7 @@ def run(out: str = "", model_size: int = 64, batch_size: int = 16,
 
     n_batches = stats_i.n_batches
     result = {
+        **platform_payload(),
         "workload": "BiLSTM-Tagger (quickstart chain)",
         "model_size": model_size,
         "batch_size": batch_size,

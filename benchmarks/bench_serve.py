@@ -32,7 +32,8 @@ from repro.core.cache import FIFOCache, LRUCache
 from repro.models.workloads import make_workload
 from repro.serve import ServeEngine, synth_trace
 
-from .common import add_jax_cache_arg, emit, maybe_enable_jax_cache
+from .common import (add_jax_cache_arg, emit, maybe_enable_jax_cache,
+                     platform_payload)
 
 
 def lm_trace(workloads, n, rate, max_new, seed=0):
@@ -98,6 +99,7 @@ def run(out: str = "", model_size: int = 32, requests: int = 32,
     emit("bench_serve/mixed_equivalence", 0.0, f"equal={mix_equivalent}")
 
     result = {
+        **platform_payload(),
         "model_size": model_size, "requests": requests, "max_new": max_new,
         "rate": rate, "max_slots": max_slots,
         "interpreted_wave": lm_stats["interpreted_wave"].as_dict(),

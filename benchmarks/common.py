@@ -19,6 +19,17 @@ def maybe_enable_jax_cache(args) -> None:
         enable_compilation_cache(args.jax_cache)
 
 
+def platform_payload(mesh=None) -> dict:
+    """Execution-environment stamp for every BENCH_*.json payload: jax
+    platform, device count, and the mesh shape (empty when unsharded) keep
+    perf trajectories comparable across backends and replica counts."""
+    import jax
+
+    return {"jax_platform": jax.default_backend(),
+            "jax_device_count": jax.device_count(),
+            "mesh_shape": dict(mesh.shape) if mesh is not None else {}}
+
+
 def timeit(fn, *, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time per call in seconds."""
     for _ in range(warmup):

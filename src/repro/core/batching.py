@@ -17,6 +17,11 @@ from .graph import Graph, GraphState, TypeId
 
 Schedule = list[tuple[TypeId, list[int]]]
 
+# FSM policy payload format version: written by to_payload, checked by
+# from_payload, and re-exported by serve/registry.py (REGISTRY_VERSION) so
+# the writer and both readers can never drift apart.
+PAYLOAD_VERSION = 1
+
 
 class Policy(Protocol):
     def next_type(self, state: GraphState) -> TypeId: ...
@@ -159,12 +164,13 @@ class FSMPolicy:
                          key=lambda e: json.dumps(e[0]))
             q_enc.append([encode_state(s), row])
         q_enc.sort(key=lambda e: json.dumps(e[0]))
-        return {"version": 1, "encoding": self.encoding, "q": q_enc}
+        return {"version": PAYLOAD_VERSION, "encoding": self.encoding,
+                "q": q_enc}
 
     @classmethod
     def from_payload(cls, payload: dict) -> "FSMPolicy":
         from .encodings import ENCODERS
-        if payload.get("version") != 1:
+        if payload.get("version") != PAYLOAD_VERSION:
             raise ValueError(f"unsupported FSM payload version "
                              f"{payload.get('version')!r}")
         name = payload["encoding"]

@@ -9,9 +9,21 @@ engine that is handed it. The namespace must identify the impl set (the
 serve engine uses ``(family, id(impls))``), not just a family label —
 otherwise engines built around different weights would alias each other's
 entries. Hit/miss counters feed ``ServeStats``.
+
+Caches are **thread-safe**: schedule/plan/executable caches are shared
+per-server objects, and the planned async round pipelining (ROADMAP open
+item: pack the next round's shards host-side while a dispatch is still in
+flight) will touch them from more than one thread — ``get`` and
+``__setitem__`` (lookup + counter bump, insert + eviction) must be atomic.
+A single re-entrant lock per cache guards both; reads through plain dict
+access (``in``, ``len``, iteration in tests) stay lock-free, which is safe
+under CPython for individual dict operations. The serve engine loop itself
+is still single-threaded today.
 """
 
 from __future__ import annotations
+
+import threading
 
 
 class FIFOCache(dict):
@@ -29,19 +41,22 @@ class FIFOCache(dict):
         self.maxsize = maxsize
         self.hits = 0
         self.misses = 0
+        self._lock = threading.RLock()
 
     def get(self, key, default=None):
-        if key in self:
-            self.hits += 1
-            return super().__getitem__(key)
-        self.misses += 1
-        return default
+        with self._lock:
+            if key in self:
+                self.hits += 1
+                return super().__getitem__(key)
+            self.misses += 1
+            return default
 
     def __setitem__(self, key, value) -> None:
-        if key not in self:
-            while len(self) >= self.maxsize:
-                super().pop(next(iter(self)))
-        super().__setitem__(key, value)
+        with self._lock:
+            if key not in self:
+                while len(self) >= self.maxsize:
+                    super().pop(next(iter(self)))
+            super().__setitem__(key, value)
 
 
 class LRUCache(FIFOCache):
@@ -54,10 +69,11 @@ class LRUCache(FIFOCache):
     """
 
     def get(self, key, default=None):
-        if key in self:
-            self.hits += 1
-            value = super(FIFOCache, self).pop(key)   # re-insert at the end
-            super(FIFOCache, self).__setitem__(key, value)
-            return value
-        self.misses += 1
-        return default
+        with self._lock:
+            if key in self:
+                self.hits += 1
+                value = super(FIFOCache, self).pop(key)  # re-insert at end
+                super(FIFOCache, self).__setitem__(key, value)
+                return value
+            self.misses += 1
+            return default

@@ -36,22 +36,34 @@ specialization:
   gather→cell kernel (:mod:`repro.kernels.fused_gather_cell`) straight off
   the arenas instead of materializing gathered operands.
 
+- **Sharded bucketed execution** (:class:`ShardedBucketedPlanExecutor`).
+  K shards' runtime operands — index packs, aux vectors, arena pools,
+  per-shard params such as serve slot pools — stack on a leading device
+  axis and the same bucket program runs under ``jax.shard_map`` over a 1-D
+  ``("data",)`` mesh: one executable, one dispatch, K data-parallel
+  replicas.  Bucket signatures carry the shard count
+  (``BucketSpec.n_shards``), so the executable cache and persistent XLA
+  cache key sharded builds apart from single-device ones with no new
+  machinery.
+
 Both compiled paths execute as one ``jax.jit`` dispatch per run.  The
 interpreted executor remains the reference path; the equivalence suites in
-``tests/test_plan.py`` and ``tests/test_bucketed.py`` pin all three
-together numerically.
+``tests/test_plan.py``, ``tests/test_bucketed.py``, and
+``tests/test_sharded.py`` pin them together numerically.
 """
 
 from __future__ import annotations
 
 import time
 import warnings
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec
 
 from . import memplan
 from .batching import Policy, Schedule, policy_cache_key, resolve_schedule
@@ -336,13 +348,18 @@ def _params_kind(params: Any) -> tuple:
                   for x in jax.tree.leaves(params)))
 
 
-def _gather_node_aux(graph: Graph, perm: np.ndarray) -> jnp.ndarray:
-    """The flat per-run aux operand: node ``aux`` attrs in plan order."""
+def _node_aux_np(graph: Graph, perm: np.ndarray) -> np.ndarray:
+    """Host-side flat aux vector: node ``aux`` attrs in plan order."""
     if perm.size == 0:
-        return jnp.zeros(0, jnp.int32)
+        return np.zeros(0, np.int32)
     aux_all = np.asarray([n.attrs.get("aux", 0) for n in graph.nodes],
                          np.int32)
-    return jnp.asarray(aux_all[perm])
+    return aux_all[perm]
+
+
+def _gather_node_aux(graph: Graph, perm: np.ndarray) -> jnp.ndarray:
+    """The flat per-run aux operand: node ``aux`` attrs in plan order."""
+    return jnp.asarray(_node_aux_np(graph, perm))
 
 
 class PlanResult:
@@ -592,10 +609,18 @@ class BucketStepSpec:
 @dataclass(frozen=True)
 class BucketSpec:
     """The bucket signature: everything the jitted program specializes on.
-    Two topologies with equal specs share one XLA executable."""
+    Two topologies with equal specs share one XLA executable.
+
+    ``n_shards`` is 1 for the single-device program; the sharded executor
+    re-keys the same signature at its replica count (the per-shard program
+    is identical — only the leading device axis of the operands changes),
+    so the LRU executable cache and persistent-jaxcache keys distinguish
+    replicated from single-device builds without any new cache machinery.
+    """
 
     steps: tuple[BucketStepSpec, ...]
     arena_rows: tuple[tuple[ArenaKey, int], ...]   # padded rows, sorted
+    n_shards: int = 1
 
     @property
     def n_index_lanes(self) -> int:
@@ -617,9 +642,14 @@ class BucketedPack:
 
     def __init__(self, spec: BucketSpec, idxpack: jnp.ndarray,
                  aux_perm: np.ndarray, row_of: dict, stats: PlanStats,
-                 impls: dict[TypeId, NodeImpl] | None = None):
+                 impls: dict[TypeId, NodeImpl] | None = None,
+                 idxpack_np: np.ndarray | None = None):
         self.spec = spec
         self.idxpack = idxpack        # (n_index_lanes,) int32, device-resident
+        # Host copy kept for the sharded executor, which stacks K shards'
+        # index vectors on a leading device axis each round.
+        self.idxpack_np = (idxpack_np if idxpack_np is not None
+                           else np.asarray(idxpack))
         self.aux_perm = aux_perm      # (n_aux_lanes,) int32 node ids
         self.row_of = row_of
         self.stats = stats
@@ -713,7 +743,7 @@ def pack_bucketed(low: Lowering, *, ladder: tuple[int, ...] | None = None,
                else np.zeros(0, np.int32))
     return BucketedPack(spec, jnp.asarray(idxpack),
                         np.asarray(aux_perm, np.int32), low.row_of, stats,
-                        impls=impls)
+                        impls=impls, idxpack_np=idxpack)
 
 
 class _BucketProgram:
@@ -836,10 +866,15 @@ class BucketedPlanExecutor:
         return pack
 
     def _ensure_executable(self, pack: BucketedPack, params: Any
-                           ) -> tuple[Any, float]:
+                           ) -> tuple[Any, tuple, float]:
+        """Returns ``(key, entry, compile_s)``. The entry comes straight
+        from the locked cache ``get`` (or the fresh build) — callers must
+        not re-read the shared cache afterwards: a concurrent insert could
+        evict the key between the check and the act."""
         key = (self._ns, pack.spec, _params_kind(params))
-        if self._exes.get(key) is not None:
-            return key, 0.0
+        entry = self._exes.get(key)
+        if entry is not None:
+            return key, entry, 0.0
         t0 = time.perf_counter()
         prog = _BucketProgram(pack.spec, self.impls,
                               gather_interpret=self.gather_interpret,
@@ -856,13 +891,14 @@ class BucketedPlanExecutor:
         # The impls dict rides along to pin its id for the entry's lifetime
         # (the AOT executable itself holds no reference to it): shared
         # caches namespace on id(impls), which must not be recycled.
-        self._exes[key] = (exe, pool, self.impls)
+        entry = (exe, pool, self.impls)
+        self._exes[key] = entry
         dt = time.perf_counter() - t0
         self.n_bucket_compiles += 1
         self.compile_time_s += dt
         pack.stats.n_compiles += 1
         pack.stats.compile_time_s += dt
-        return key, dt
+        return key, entry, dt
 
     def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
             stats: ExecStats | None = None, params: Any = None) -> PlanResult:
@@ -870,8 +906,8 @@ class BucketedPlanExecutor:
         pack = self.pack_for(graph, policy, stats)
         params = params if params is not None else self.params
         aux = _gather_node_aux(graph, pack.aux_perm)
-        key, compile_s = self._ensure_executable(pack, params)
-        exe, pool, impls_pin = dict.__getitem__(self._exes, key)
+        key, entry, compile_s = self._ensure_executable(pack, params)
+        exe, pool, impls_pin = entry
         t1 = time.perf_counter()
         arenas = exe(params, pack.idxpack, aux, pool)
         jax.block_until_ready(list(arenas.values()))
@@ -887,3 +923,204 @@ class BucketedPlanExecutor:
         stats.n_batches += pack.stats.n_steps
         stats.n_launches += 1
         return PlanResult(graph, self.impls, arenas, pack.row_of)
+
+
+# ---------------------------------------------------------------------------
+# Sharded bucketed execution (data-parallel replicas)
+# ---------------------------------------------------------------------------
+
+
+def _merge_params(replicated: Any, per_shard: Any) -> Any:
+    """Combine the replicated params pytree with a shard's slice of the
+    sharded params. Dicts merge key-wise (sharded keys win); otherwise
+    exactly one side may be non-None."""
+    if per_shard is None:
+        return replicated
+    if replicated is None:
+        return per_shard
+    if isinstance(replicated, dict) and isinstance(per_shard, dict):
+        merged = dict(replicated)
+        merged.update(per_shard)
+        return merged
+    raise TypeError(
+        "params and shard_params can only be combined when both are dicts; "
+        f"got {type(replicated).__name__} and {type(per_shard).__name__}")
+
+
+class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
+    """Data-parallel counterpart of :class:`BucketedPlanExecutor`: K shards'
+    runtime operands (index packs, aux vectors, arena pools, per-shard
+    params such as lm slot pools) are stacked on a leading device axis and
+    the *same* bucket program runs under ``shard_map`` over a 1-D
+    ``("data",)`` mesh — one executable, one dispatch, K replicas.
+
+    The per-shard computation is the single-device program verbatim, so
+    shard results are numerically identical to running each shard's graph
+    through :class:`BucketedPlanExecutor` alone (pinned by
+    ``tests/test_sharded.py``). Executables are cached by the bucket
+    signature re-keyed at ``n_shards=K`` — the same LRU cache and
+    persistent-jaxcache machinery as the single-device path.
+
+    ``run_sharded`` requires every shard's pack to share one bucket
+    signature (the serve scheduler pads shards to a common signature for
+    lm rounds). When signatures diverge — e.g. a round of structurally
+    different tree graphs — or some shards are idle, it degrades to
+    per-shard sequential execution through the inherited single-device
+    path (still bucketed, still cached; counted in
+    ``n_fallback_rounds``).
+    """
+
+    def __init__(self, impls: dict[TypeId, NodeImpl], params: Any, *,
+                 mesh: Any = None, n_shards: int | None = None, **kwargs):
+        super().__init__(impls, params, **kwargs)
+        if mesh is None:
+            from repro.launch.mesh import make_data_mesh
+            mesh = make_data_mesh(n_shards)
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"sharded plan execution needs a 1-D data mesh, got axes "
+                f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = mesh.axis_names[0]
+        self.n_shards = int(mesh.devices.size)
+        if n_shards is not None and n_shards != self.n_shards:
+            raise ValueError(f"mesh has {self.n_shards} devices, "
+                             f"n_shards={n_shards}")
+        self.n_sharded_dispatches = 0
+        self.n_fallback_rounds = 0
+
+    # -- sharded executable ---------------------------------------------------
+
+    def shard_sharding(self) -> NamedSharding:
+        """Placement of every shard-stacked operand: split on the data
+        axis. The serve engine places the slot pool with this up front so
+        the per-dispatch normalization below is a no-op."""
+        return NamedSharding(self.mesh, PartitionSpec(self.axis))
+
+    def _ensure_sharded_executable(self, sspec: BucketSpec, params: Any,
+                                   shard_params: Any
+                                   ) -> tuple[Any, tuple, float]:
+        """Returns ``(key, entry, compile_s)`` — see
+        :meth:`BucketedPlanExecutor._ensure_executable` for why the entry
+        is returned instead of re-read from the shared cache."""
+        key = (self._ns, sspec, _params_kind(params),
+               _params_kind(shard_params))
+        entry = self._exes.get(key)
+        if entry is not None:
+            return key, entry, 0.0
+        t0 = time.perf_counter()
+        prog = _BucketProgram(sspec, self.impls,
+                              gather_interpret=self.gather_interpret,
+                              fused=self.fused,
+                              fused_interpret=self.fused_interpret)
+        P, axis = PartitionSpec, self.axis
+
+        def one_shard(rep, shp, idx, aux, pools):
+            # shard_map hands each device a leading-axis block of size 1;
+            # inside, the body is the single-device program verbatim.
+            def sq(t):
+                return jax.tree.map(lambda x: jnp.squeeze(x, 0), t)
+
+            p = _merge_params(rep, None if shp is None else sq(shp))
+            out = prog.body(p, idx[0], aux[0], sq(pools))
+            return jax.tree.map(lambda x: x[None], out)
+
+        fn = shard_map(one_shard, mesh=self.mesh,
+                       in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+                       out_specs=P(axis))
+        K = self.n_shards
+        idx_spec = jax.ShapeDtypeStruct((K, sspec.n_index_lanes), jnp.int32)
+        aux_spec = jax.ShapeDtypeStruct((K, sspec.n_aux_lanes), jnp.int32)
+        shapes = jax.eval_shape(lambda p, sp, ix, ax: fn(p, sp, ix, ax, {}),
+                                params, shard_params, idx_spec, aux_spec)
+        sharding = self.shard_sharding()
+        pool = {k: jax.device_put(jnp.zeros(s.shape, s.dtype), sharding)
+                for k, s in shapes.items()}
+        jitted = jax.jit(fn, donate_argnums=(4,) if self.donate else ())
+        exe = jitted.lower(params, shard_params, idx_spec, aux_spec,
+                           pool).compile()
+        entry = (exe, pool, self.impls)
+        self._exes[key] = entry
+        dt = time.perf_counter() - t0
+        self.n_bucket_compiles += 1
+        self.compile_time_s += dt
+        return key, entry, dt
+
+    # -- execution ------------------------------------------------------------
+
+    def _run_fallback(self, graphs, policy, stats: ExecStats, params: Any,
+                      shard_params: Any) -> list[PlanResult | None]:
+        self.n_fallback_rounds += 1
+        results: list[PlanResult | None] = []
+        for s, g in enumerate(graphs):
+            if g is None:
+                results.append(None)
+                continue
+            mine = (None if shard_params is None
+                    else jax.tree.map(lambda x: x[s], shard_params))
+            results.append(super().run(g, policy, stats,
+                                       params=_merge_params(params, mine)))
+        return results
+
+    def run_sharded(self, graphs, policy: Policy | Callable[[Graph], Schedule],
+                    stats: ExecStats | None = None, params: Any = None,
+                    shard_params: Any = None) -> list[PlanResult | None]:
+        """Run one graph per shard (``None`` = idle shard) in one dispatch.
+
+        ``params`` is replicated across shards; ``shard_params`` is a pytree
+        whose leaves carry a leading ``n_shards`` axis (e.g. the serve
+        engine's stacked lm slot pool) and is split along the mesh. Returns
+        one :class:`PlanResult` per shard, viewing that shard's slice of
+        the stacked arenas.
+        """
+        stats = stats if stats is not None else ExecStats()
+        params = params if params is not None else self.params
+        if len(graphs) != self.n_shards:
+            raise ValueError(f"expected {self.n_shards} graphs (one per "
+                             f"shard, None for idle), got {len(graphs)}")
+        packs = [self.pack_for(g, policy, stats) if g is not None else None
+                 for g in graphs]
+        specs = {p.spec for p in packs if p is not None}
+        if not specs:
+            return [None] * self.n_shards
+        if any(p is None for p in packs) or len(specs) != 1:
+            return self._run_fallback(graphs, policy, stats, params,
+                                      shard_params)
+
+        sspec = replace(packs[0].spec, n_shards=self.n_shards)
+        idx = np.stack([p.idxpack_np for p in packs])
+        aux = np.stack([_node_aux_np(g, p.aux_perm)
+                        for g, p in zip(graphs, packs)])
+        if shard_params is not None:
+            # The AOT executable pins its input shardings; host-side
+            # updates (e.g. the engine's slot writeback) leave the stacked
+            # leaves on the default device, so normalize them onto the
+            # mesh. A no-op when already placed.
+            sharding = self.shard_sharding()
+            shard_params = jax.tree.map(
+                lambda x: jax.device_put(x, sharding), shard_params)
+        key, entry, compile_s = self._ensure_sharded_executable(sspec, params,
+                                                                shard_params)
+        if compile_s > 0:
+            # Mirror the single-device path's per-pack compile accounting
+            # (charged to the pack that triggered the build) so pack-level
+            # stats stay comparable across both paths.
+            packs[0].stats.n_compiles += 1
+            packs[0].stats.compile_time_s += compile_s
+        exe, pool, impls_pin = entry
+        t1 = time.perf_counter()
+        arenas = exe(params, shard_params, idx, aux, pool)
+        jax.block_until_ready(list(arenas.values()))
+        dt = time.perf_counter() - t1
+        if self.donate:
+            self._exes[key] = (exe, arenas, impls_pin)
+        if compile_s > 0:
+            stats.lower_time += compile_s
+            stats.n_compiles += 1
+        stats.exec_time += dt
+        stats.n_batches += sum(p.stats.n_steps for p in packs)
+        stats.n_launches += 1
+        self.n_sharded_dispatches += 1
+        return [PlanResult(g, self.impls,
+                           {k: v[s] for k, v in arenas.items()}, p.row_of)
+                for s, (g, p) in enumerate(zip(graphs, packs))]

@@ -1,5 +1,12 @@
-"""Production mesh construction.
+"""Mesh construction: small data-parallel serve meshes and the production
+training shapes.
 
+Serve replicas: ``make_data_mesh(k)`` — a 1-D ``("data",)`` mesh over the
+first k local devices, the mesh the sharded bucketed-plan executor
+(`core.plan.ShardedBucketedPlanExecutor`) runs under. On a CPU host, force
+devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+Production training shapes:
 Single pod: 16 x 16 = 256 chips, axes ("data", "model").
 Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
 "pod" axis is pure data parallelism across ICI-disjoint pods (DCN).
@@ -13,20 +20,38 @@ from __future__ import annotations
 import numpy as np
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def device_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """A mesh over the first ``prod(shape)`` local devices."""
     import jax
 
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) < n:
         raise RuntimeError(
-            f"need {n} devices, found {len(devices)} — run under "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 "
-            f"(dryrun.py sets this automatically)")
+            f"need {n} devices for mesh {dict(zip(axes, shape))}, found "
+            f"{len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"(dryrun.py and bench_scale.py set this automatically)")
     dev = np.asarray(devices[:n]).reshape(shape)
     return jax.sharding.Mesh(dev, axes)
+
+
+def make_data_mesh(n_devices: int | None = None, *, axis: str = "data"):
+    """A 1-D pure data-parallel mesh over ``n_devices`` (default: all local
+    devices) — one replica of the bucketed plan program per device."""
+    import jax
+
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    return device_mesh((n_devices,), (axis,))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return device_mesh(shape, axes)
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

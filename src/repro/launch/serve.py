@@ -12,6 +12,11 @@ latency-percentile stats.
     PYTHONPATH=src python -m repro.launch.serve --registry runs/registry \
         --train-policy --requests 16
 
+    # 4 data-parallel replicas (sharded bucketed plans over a ("data",) mesh)
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --devices 4 \
+        --requests 32 --arrivals poisson
+
 Trace JSON format (``--trace``): a list of entries
 ``{"family": "lm", "arrival": 0.5, "prompt": [1,2,3], "max_new": 8}`` —
 single-shot entries use ``{"family": "tree", "arrival": ..., "size": 8}``
@@ -113,6 +118,19 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="arrivals per scheduler round")
+    ap.add_argument("--arrivals", choices=["constant", "poisson", "burst"],
+                    default="constant",
+                    help="arrival process for the synthetic trace "
+                         "(constant i/rate, Poisson exponential gaps, or "
+                         "bursts of --burst-size at the same mean rate)")
+    ap.add_argument("--burst-size", type=int, default=4,
+                    help="requests per burst for --arrivals burst")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="data-parallel replicas: shard bucketed plan "
+                         "execution over a 1-D ('data',) mesh of this many "
+                         "devices (bucketed plan mode only; on CPU force "
+                         "devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--model-size", type=int, default=32)
     ap.add_argument("--max-slots", type=int, default=16)
@@ -140,6 +158,20 @@ def main(argv=None):
                     help="restore TransformerLM weights (legacy path only)")
     args = ap.parse_args(argv)
 
+    # Flag-compatibility and device-count checks fail fast, before any
+    # policy training or trace construction.
+    if args.devices > 1 and args.plan != "bucketed":
+        ap.error("--devices > 1 requires --plan bucketed (replicas shard "
+                 "the bucketed executable)")
+    if args.devices > 1:
+        import jax
+        n = len(jax.devices())
+        if n < args.devices:
+            ap.error(f"--devices {args.devices} but only {n} jax device(s) "
+                     f"visible; on CPU run under XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count="
+                     f"{args.devices}")
+
     if args.jax_cache:
         from repro.launch.jaxcache import enable_compilation_cache
         enable_compilation_cache(args.jax_cache)
@@ -164,13 +196,15 @@ def main(argv=None):
         reqs = load_trace(args.trace, workloads, args.max_new)
     else:
         reqs = synth_trace(families, args.requests, args.rate, args.max_new,
-                           workloads, args.seed)
+                           workloads, args.seed, arrivals=args.arrivals,
+                           burst_size=args.burst_size)
 
     eng = ServeEngine(workloads, compiled=args.plan != "interpreted",
                       bucketed=args.plan == "bucketed",
                       continuous=args.mode == "continuous",
                       max_slots=args.max_slots, model_size=args.model_size,
-                      seed=args.seed, registry=registry)
+                      seed=args.seed, registry=registry,
+                      n_shards=args.devices)
     eng.submit_many(reqs)
     stats = eng.run()
 
@@ -178,6 +212,10 @@ def main(argv=None):
     print(f"{stats.requests_done} requests ({stats.tokens_out} tokens, "
           f"{stats.outputs_out} single-shot outputs) in {stats.wall_s:.2f}s "
           f"= {stats.tok_per_s:.1f} tok/s over {stats.n_rounds} rounds")
+    if stats.n_shards > 1:
+        print(f"{stats.n_shards} replicas: {stats.n_sharded_dispatches} "
+              f"sharded dispatches, {stats.n_shard_fallback_rounds} "
+              f"fallback rounds, per-shard tokens {stats.shard_tokens}")
     print(f"batches {stats.n_batches}, device launches {stats.n_launches}, "
           f"XLA compiles {stats.n_compiles}; "
           f"plan cache {stats.plan_cache_hits}h/{stats.plan_cache_misses}m, "

@@ -13,9 +13,10 @@
 from .engine import ServeEngine, ServeStats, serve_trace
 from .queue import AdmissionQueue, ServeRequest, graph_request, lm_request
 from .registry import PolicyRegistry
-from .scheduler import ContinuousScheduler
-from .traces import synth_trace
+from .scheduler import ContinuousScheduler, partition_singles
+from .traces import ARRIVALS, synth_arrivals, synth_trace
 
 __all__ = ["ServeEngine", "ServeStats", "serve_trace", "AdmissionQueue",
            "ServeRequest", "graph_request", "lm_request", "PolicyRegistry",
-           "ContinuousScheduler", "synth_trace"]
+           "ContinuousScheduler", "partition_singles", "ARRIVALS",
+           "synth_arrivals", "synth_trace"]

@@ -24,7 +24,15 @@ round-driven engine over the typed-graph executors:
 - schedule and plan caches are **shared, FIFO-capped** objects keyed by
   (family namespace, topology fingerprint, policy fingerprint) — one cache
   across every family executor, so a long-running server's memory is
-  bounded by two knobs, not one dict per engine.
+  bounded by two knobs, not one dict per engine,
+- ``n_shards > 1`` serves K data-parallel replicas through
+  :class:`repro.core.plan.ShardedBucketedPlanExecutor`: each round the
+  scheduler partitions work across shards (lm slots pinned to a home
+  shard, single-shot graphs balanced by node count), every shard's round
+  graph pads to one shared bucket signature, and the whole round is one
+  ``shard_map`` dispatch. The slot pool gains a leading shard axis;
+  per-shard ServeStats merge into the engine totals
+  (``shard_tokens`` shows the balance).
 
 LM recurrent state lives in a fixed slot pool threaded through executor
 ``params`` (see ``models/chains.py:ChainLM``), so one AOT executable serves
@@ -43,13 +51,15 @@ import numpy as np
 from repro.core.batching import SufficientConditionPolicy
 from repro.core.cache import FIFOCache, LRUCache
 from repro.core.executor import DynamicExecutor, ExecStats
-from repro.core.plan import BucketedPlanExecutor, PlanExecutor
+from repro.core.plan import (BucketedPlanExecutor, PlanExecutor,
+                             ShardedBucketedPlanExecutor)
 from repro.models.workloads import SERVE_FAMILIES, make_workload
 
 from .queue import AdmissionQueue, ServeRequest
-from .scheduler import (ContinuousScheduler, bucket_len,
-                        build_lm_feed_round_graph, build_lm_round_graph,
-                        merge_request_graphs)
+from .scheduler import (COUNT_BUCKET_MIN, ContinuousScheduler, RoundPlan,
+                        bucket_len, build_lm_feed_round_graph,
+                        build_lm_round_graph, merge_request_graphs,
+                        partition_singles)
 
 
 @dataclass
@@ -73,8 +83,39 @@ class ServeStats:
     sched_cache_misses: int = 0
     bucket_cache_hits: int = 0    # bucketed path: executable-cache hits
     bucket_cache_misses: int = 0
+    n_shards: int = 1
+    n_sharded_dispatches: int = 0   # rounds served by one shard_map dispatch
+    n_shard_fallback_rounds: int = 0  # rounds degraded to per-shard dispatch
+    shard_tokens: list[int] = field(default_factory=list)  # lm tokens per shard
     latency_s: list[float] = field(default_factory=list)   # admit -> done
     ttft_s: list[float] = field(default_factory=list)      # admit -> first out
+
+    _SUMMED = ("n_batches", "n_launches", "n_compiles", "tokens_out",
+               "outputs_out", "requests_done", "plan_cache_hits",
+               "plan_cache_misses", "sched_cache_hits", "sched_cache_misses",
+               "bucket_cache_hits", "bucket_cache_misses",
+               "n_sharded_dispatches", "n_shard_fallback_rounds")
+    # Shards serve the same rounds concurrently, so wall-clock style fields
+    # take the max across parts (like n_rounds), never the sum — summing
+    # would inflate them K-fold and understate tok_per_s.
+    _MAXED = ("n_rounds", "n_shards", "wall_s", "schedule_s", "lower_s",
+              "exec_s")
+
+    @classmethod
+    def merged(cls, parts) -> "ServeStats":
+        """Fold several ServeStats (e.g. per-shard sub-stats) into one:
+        counters sum, latency samples concatenate, rounds and wall-clock
+        fields take the max (shards serve the same rounds, not disjoint
+        ones)."""
+        out = cls()
+        for p in parts:
+            for f in cls._MAXED:
+                setattr(out, f, max(getattr(out, f), getattr(p, f)))
+            for f in cls._SUMMED:
+                setattr(out, f, getattr(out, f) + getattr(p, f))
+            out.latency_s.extend(p.latency_s)
+            out.ttft_s.extend(p.ttft_s)
+        return out
 
     @property
     def tok_per_s(self) -> float:
@@ -97,6 +138,12 @@ class ServeStats:
         d.update(self.latency_percentiles())
         return d
 
+    @property
+    def tokens_per_round(self) -> float:
+        """Round throughput — what replica scaling buys: more live slots
+        decode per round at the same one-dispatch-per-round cost."""
+        return self.tokens_out / max(self.n_rounds, 1)
+
 
 class ServeEngine:
     """Round-driven continuous-batching engine over typed request graphs.
@@ -117,9 +164,16 @@ class ServeEngine:
                  bucket_cache: FIFOCache | None = None,
                  bucket_ladder: tuple[int, ...] | None = (8,),
                  donate: bool = False,
+                 n_shards: int = 1, mesh: Any = None,
                  max_rounds: int = 100_000):
         self.compiled = compiled
         self.bucketed = bucketed
+        self.n_shards = int(n_shards)
+        self._mesh = mesh
+        if self.n_shards > 1 and not (compiled and bucketed):
+            raise ValueError(
+                "multi-shard serving runs on the bucketed compiled-plan "
+                "path; pass compiled=True, bucketed=True (or n_shards=1)")
         # Serving widths bucket with a floor (default 8): decode counts 1..8
         # and single-chain cell batches all land on one rung, so a server's
         # whole decode phase shares one executable. Past the floor the
@@ -136,8 +190,12 @@ class ServeEngine:
         # fragments padded again on top of dummies).
         self.scheduler = ContinuousScheduler(
             max_slots=max_slots, continuous=continuous,
-            pad_decode=not (compiled and bucketed))
-        self.stats = ServeStats()
+            pad_decode=not (compiled and bucketed), n_shards=self.n_shards)
+        self.stats = ServeStats(n_shards=self.n_shards)
+        # Per-shard sub-stats (tokens, outputs, latency): merged into
+        # ``stats`` when a run completes, and surfaced as ``shard_tokens``
+        # so load balance across replicas is visible.
+        self._shard_stats = [ServeStats() for _ in range(self.n_shards)]
         # Shared, capped caches (satellite: not per-engine dicts). Callers
         # may pass their own to share across engines/processes of a server.
         # On the bucketed path ``plan_cache`` holds host-side topology packs
@@ -188,7 +246,17 @@ class ServeEngine:
             # BucketedPack, bucket-executable entry) pins the impls dict,
             # so its id cannot be recycled while entries live.
             ns = (name, id(wl.impls))
-            if self.compiled and self.bucketed:
+            if self.compiled and self.bucketed and self.n_shards > 1:
+                # n_shards rides along so the executor validates it against
+                # the mesh size at construction (a caller-supplied mesh of
+                # the wrong size must not crash deep in the first round).
+                ex = ShardedBucketedPlanExecutor(
+                    wl.impls, None, mesh=self._data_mesh(),
+                    n_shards=self.n_shards,
+                    layout=self.layout, donate=self.donate,
+                    ladder=self.bucket_ladder, pack_cache=self.plan_cache,
+                    exe_cache=self.bucket_cache, namespace=ns)
+            elif self.compiled and self.bucketed:
                 ex = BucketedPlanExecutor(wl.impls, None, layout=self.layout,
                                           donate=self.donate,
                                           ladder=self.bucket_ladder,
@@ -207,10 +275,36 @@ class ServeEngine:
             self._exec_stats[name] = ExecStats()
         return ex
 
+    def _data_mesh(self):
+        """The shared 1-D data mesh, built lazily (first executor) so an
+        unsharded engine never touches jax device state."""
+        if self._mesh is None:
+            from repro.launch.mesh import make_data_mesh
+            self._mesh = make_data_mesh(self.n_shards)
+        return self._mesh
+
     def _lm_pool(self):
         if self._pool is None:
             wl = self.family("lm")
-            self._pool = wl.init_slots(self.scheduler.max_slots)
+            if self.n_shards > 1:
+                # Stacked per-shard pools, (n_shards, slots_per_shard, h):
+                # leading axis is the device axis the sharded executor
+                # splits, so a slot's recurrent state lives on its home
+                # shard for the whole request lifetime. Stacking (not
+                # zeros) preserves any non-zero initial state the workload
+                # defines, and placing the stack with the executor's own
+                # sharding up front keeps the pool device-resident across
+                # rounds — the per-dispatch device_put is then a no-op.
+                import jax
+
+                base = wl.init_slots(self.scheduler.slots_per_shard)
+                sharding = self._executor("lm").shard_sharding()
+                self._pool = {
+                    f: jax.device_put(jnp.stack([v] * self.n_shards),
+                                      sharding)
+                    for f, v in base.items()}
+            else:
+                self._pool = wl.init_slots(self.scheduler.max_slots)
         return self._pool
 
     # -- request intake ------------------------------------------------------
@@ -268,23 +362,54 @@ class ServeEngine:
 
     # -- per-family round execution -----------------------------------------
 
+    def _start_feed(self, plan, wl, pool) -> None:
+        """Token-level (iteration) scheduling setup: fresh requests zero
+        their slot and will feed the padded prompt one token per round
+        through the same decode fragment every request uses — the round
+        topology depends only on the padded entry count, so the whole lm
+        lifetime runs through one or two bucketed executables."""
+        if not plan.prefills:
+            return
+        for e in plan.prefills:
+            req = e.req
+            Lb = bucket_len(len(req.prompt),
+                            self.scheduler.prefill_bucket_min)
+            req.feed = ([0] * (Lb - len(req.prompt)) + list(req.prompt))
+            req.n_fed = 0
+        # One batched zeroing scatter per state field (not one full-pool
+        # copy-on-write update per prefill entry per field).
+        slots = np.asarray([e.slot for e in plan.prefills], np.int32)
+        if self.n_shards > 1:
+            shards = np.asarray([e.shard for e in plan.prefills], np.int32)
+            for f in wl.state_fields:
+                pool[f] = pool[f].at[shards, slots].set(0.0)
+        else:
+            for f in wl.state_fields:
+                pool[f] = pool[f].at[slots].set(0.0)
+
+    def _feed_tokens(self, entries, toks, now: float, st: ServeStats) -> None:
+        for e, tok in zip(entries, toks):
+            req = e.req
+            if req.feed is not None and req.n_fed < len(req.feed):
+                # Prefill round: logits only matter after the last prompt
+                # token has been fed.
+                req.n_fed += 1
+                if req.n_fed < len(req.feed):
+                    continue
+            if not req.out:
+                req.t_first = now
+            req.out.append(int(tok))
+            st.tokens_out += 1
+            if req.done:
+                self._finish(req, now, st)
+
     def _run_lm_round(self, plan) -> None:
+        if self.n_shards > 1:
+            return self._run_lm_round_sharded(plan)
         wl = self.family("lm")
         pool = self._lm_pool()
         if self.compiled and self.bucketed:
-            # Token-level (iteration) scheduling: fresh requests zero their
-            # slot and feed the padded prompt one token per round through
-            # the same decode fragment every request uses — the round
-            # topology depends only on the padded entry count, so the whole
-            # lm lifetime runs through one or two bucketed executables.
-            for e in plan.prefills:
-                req = e.req
-                Lb = bucket_len(len(req.prompt),
-                                self.scheduler.prefill_bucket_min)
-                req.feed = ([0] * (Lb - len(req.prompt)) + list(req.prompt))
-                req.n_fed = 0
-                for f in wl.state_fields:
-                    pool[f] = pool[f].at[e.slot].set(0.0)
+            self._start_feed(plan, wl, pool)
             graph, entries = build_lm_feed_round_graph(plan)
         else:
             graph = build_lm_round_graph(
@@ -305,25 +430,65 @@ class ServeEngine:
         for f in wl.state_fields:
             vals = res.field(f, cell_ids)
             pool[f] = pool[f].at[slots].set(vals)
+        self._feed_tokens(entries, toks, time.perf_counter(), self.stats)
+
+    def _run_lm_round_sharded(self, plan) -> None:
+        """One shard_map dispatch for every shard's lm fragments: per-shard
+        entry lists pad to the max count bucket across shards (idle shards
+        run all-dummy graphs) so all K round graphs share one topology and
+        therefore one bucket signature."""
+        wl = self.family("lm")
+        pool = self._lm_pool()
+        self._start_feed(plan, wl, pool)
+        shard_plans = [RoundPlan() for _ in range(self.n_shards)]
+        for e in plan.prefills:
+            shard_plans[e.shard].prefills.append(e)
+        for e in plan.decodes:
+            shard_plans[e.shard].decodes.append(e)
+        counts = [len(sp.prefills) + len(sp.decodes) for sp in shard_plans]
+        if not any(counts):
+            return
+        target = max(bucket_len(c, COUNT_BUCKET_MIN) for c in counts)
+        built = [build_lm_feed_round_graph(sp, count=target)
+                 for sp in shard_plans]
+        ex = self._executor("lm")
+        results = ex.run_sharded([g for g, _ in built], self.policy_for("lm"),
+                                 self._exec_stats["lm"],
+                                 shard_params={"slots": pool})
         now = time.perf_counter()
-        for e, tok in zip(entries, toks):
-            req = e.req
-            if req.feed is not None and req.n_fed < len(req.feed):
-                # Prefill round: logits only matter after the last prompt
-                # token has been fed.
-                req.n_fed += 1
-                if req.n_fed < len(req.feed):
-                    continue
-            if not req.out:
-                req.t_first = now
-            req.out.append(int(tok))
-            self.stats.tokens_out += 1
-            if req.done:
-                self._finish(req, now)
+        # One combined scatter per state field across all shards (not K
+        # copy-on-write pool updates): collect every live entry's (shard,
+        # slot, state) first, write once. State values stay on device —
+        # only the logits cross to host (the argmax token feedback, same
+        # as the single-device path).
+        shards_ix: list[int] = []
+        slots_ix: list[int] = []
+        state_vals: dict[str, list] = {f: [] for f in wl.state_fields}
+        fed: list[tuple[list, np.ndarray, ServeStats]] = []
+        for s, (res, (_, entries)) in enumerate(zip(results, built)):
+            if not entries:
+                continue
+            ys = np.asarray(res.field("y", [e.o_node for e in entries]))
+            cell_ids = [e.cell_node for e in entries]
+            shards_ix.extend([s] * len(entries))
+            slots_ix.extend(e.slot for e in entries)
+            for f in wl.state_fields:
+                state_vals[f].append(res.field(f, cell_ids))
+            fed.append((entries, np.argmax(ys, axis=-1),
+                        self._shard_stats[s]))
+        shards_arr = np.asarray(shards_ix, np.int32)
+        slots_arr = np.asarray(slots_ix, np.int32)
+        for f in wl.state_fields:
+            pool[f] = pool[f].at[shards_arr, slots_arr].set(
+                jnp.concatenate(state_vals[f]))
+        for entries, toks, st in fed:
+            self._feed_tokens(entries, toks, now, st)
 
     def _run_single_shot(self, fam: str, reqs: list[ServeRequest]) -> None:
         if not reqs:
             return
+        if self.n_shards > 1:
+            return self._run_single_shot_sharded(fam, reqs)
         ex = self._executor(fam)
         graph, out_ids = merge_request_graphs(reqs)
         res = ex.run(graph, self.policy_for(fam), self._exec_stats[fam])
@@ -334,12 +499,34 @@ class ServeEngine:
             self.stats.outputs_out += len(ids)
             self._finish(req, now)
 
-    def _finish(self, req: ServeRequest, now: float) -> None:
+    def _run_single_shot_sharded(self, fam: str,
+                                 reqs: list[ServeRequest]) -> None:
+        """Single-shot graphs balance across shards by node count; rounds
+        whose shard graphs don't land on one bucket signature (or leave
+        shards idle) degrade to per-shard dispatch inside the executor."""
+        groups = partition_singles(reqs, self.n_shards)
+        built = [merge_request_graphs(grp) if grp else (None, [])
+                 for grp in groups]
+        ex = self._executor(fam)
+        results = ex.run_sharded([g for g, _ in built], self.policy_for(fam),
+                                 self._exec_stats[fam])
+        now = time.perf_counter()
+        for s, (grp, (_, out_ids)) in enumerate(zip(groups, built)):
+            res, st = results[s], self._shard_stats[s]
+            for req, ids in zip(grp, out_ids):
+                req.result = np.asarray(res.field("y", ids))
+                req.t_first = now
+                st.outputs_out += len(ids)
+                self._finish(req, now, st)
+
+    def _finish(self, req: ServeRequest, now: float,
+                st: ServeStats | None = None) -> None:
+        st = st if st is not None else self.stats
         req.done_round = self._round
         req.t_done = now
-        self.stats.requests_done += 1
-        self.stats.latency_s.append(now - req.t_admit)
-        self.stats.ttft_s.append(req.t_first - req.t_admit)
+        st.requests_done += 1
+        st.latency_s.append(now - req.t_admit)
+        st.ttft_s.append(req.t_first - req.t_admit)
         if req.family == "lm":
             self.scheduler.release(req)
 
@@ -347,6 +534,22 @@ class ServeEngine:
 
     def _fold_exec_stats(self) -> None:
         s = self.stats
+        if self.n_shards > 1:
+            # Per-request accounting lived in per-shard sub-stats; merge
+            # them (idempotent: absolute recompute, not accumulation).
+            agg = ServeStats.merged(self._shard_stats)
+            s.tokens_out = agg.tokens_out
+            s.outputs_out = agg.outputs_out
+            s.requests_done = agg.requests_done
+            s.latency_s = agg.latency_s
+            s.ttft_s = agg.ttft_s
+            s.shard_tokens = [p.tokens_out for p in self._shard_stats]
+            s.n_sharded_dispatches = sum(
+                getattr(ex, "n_sharded_dispatches", 0)
+                for ex in self._executors.values())
+            s.n_shard_fallback_rounds = sum(
+                getattr(ex, "n_fallback_rounds", 0)
+                for ex in self._executors.values())
         s.n_batches = sum(es.n_batches for es in self._exec_stats.values())
         s.n_launches = sum(es.n_launches for es in self._exec_stats.values())
         s.n_compiles = sum(es.n_compiles for es in self._exec_stats.values())

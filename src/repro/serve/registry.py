@@ -28,10 +28,13 @@ import json
 import os
 from dataclasses import dataclass
 
-from repro.core.batching import FSMPolicy, fingerprint_payload
+from repro.core.batching import (PAYLOAD_VERSION, FSMPolicy,
+                                 fingerprint_payload)
 from repro.core.rl import RLResult
 
-REGISTRY_VERSION = 1
+# One constant for writer and readers: files carry the FSM payload version
+# that FSMPolicy.to_payload stamps.
+REGISTRY_VERSION = PAYLOAD_VERSION
 
 
 @dataclass
@@ -40,6 +43,7 @@ class RegistryEntry:
     fingerprint: str
     path: str
     meta: dict
+    version: int | None = REGISTRY_VERSION
 
 
 class PolicyRegistry:
@@ -100,13 +104,20 @@ class PolicyRegistry:
                 continue
             out.append(RegistryEntry(family=family,
                                      fingerprint=fn[:-len(".json")],
-                                     path=path, meta=doc.get("meta", {})))
+                                     path=path, meta=doc.get("meta", {}),
+                                     version=doc.get("version")))
         return out
 
     def load(self, family: str, fingerprint: str) -> FSMPolicy:
         path = os.path.join(self._family_dir(family), f"{fingerprint}.json")
         with open(path) as f:
             doc = json.load(f)
+        ver = doc.get("version")
+        if ver != REGISTRY_VERSION:
+            raise ValueError(
+                f"registry file {path} has payload version {ver!r}; this "
+                f"loader supports version {REGISTRY_VERSION} — retrain the "
+                f"policy or upgrade the serving binary")
         policy = FSMPolicy.from_payload(doc)
         if policy.cache_key() != fingerprint:
             raise ValueError(
@@ -120,8 +131,13 @@ class PolicyRegistry:
         so the choice is deterministic. Ranks by ``final_batches`` — the
         serialized Q-table *is* the final policy, so a run whose best
         checkpoint regressed before returning must not outrank a steadier
-        one on the strength of a checkpoint it no longer embodies."""
-        entries = self.entries(family)
+        one on the strength of a checkpoint it no longer embodies.
+
+        Entries with an unknown payload version are skipped (a newer
+        trainer's files must not crash an older server's auto-select);
+        ``load`` of such a file raises instead."""
+        entries = [e for e in self.entries(family)
+                   if e.version == REGISTRY_VERSION]
         if not entries:
             return None
 

@@ -28,6 +28,13 @@ In ``continuous=False`` (wave) mode admission is gated on the engine being
 idle: a wave is drained to completion before the next one is admitted —
 the legacy ``serve/lm_wave.py`` discipline, kept as the baseline that
 ``benchmarks/bench_serve.py`` measures continuous batching against.
+
+With ``n_shards > 1`` the scheduler is replica-aware: the slot pool splits
+into per-shard pools, a prefilling lm request is pinned to a *home shard*
+for its lifetime (recurrent state never crosses devices), and
+``partition_singles`` balances single-shot graphs across shards by node
+count. The engine pads every shard's round graph to the max count bucket
+so all shards share one bucket signature per round (DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -41,6 +48,11 @@ from repro.core.plan import bucket_up
 from .queue import AdmissionQueue, ServeRequest
 
 SINGLE_SHOT_FAMILIES = ("tree", "lattice")
+
+# Floor for the padded entry count of token-level lm round graphs. The
+# engine's sharded path must pad every shard to the same rung, so it shares
+# this constant with build_lm_feed_round_graph's default.
+COUNT_BUCKET_MIN = 8
 
 
 def bucket_len(n: int, min_bucket: int = 4,
@@ -56,10 +68,16 @@ def bucket_len(n: int, min_bucket: int = 4,
 
 @dataclass
 class LMEntry:
-    """One lm request's fragment in a round graph (dummy pads have req=None)."""
+    """One lm request's fragment in a round graph (dummy pads have req=None).
+
+    ``shard`` is the request's *home shard*: assigned once at prefill time
+    and pinned for the request's lifetime, so its recurrent slot state
+    never crosses devices. Single-device serving uses shard 0 throughout.
+    """
 
     req: ServeRequest | None
     slot: int
+    shard: int = 0
     o_node: int = -1       # logits node (next-token argmax)
     cell_node: int = -1    # last cell (state written back to the slot)
 
@@ -79,27 +97,55 @@ class RoundPlan:
 
 
 class ContinuousScheduler:
-    """Slot accounting + admission discipline; graph building is below."""
+    """Slot accounting + admission discipline; graph building is below.
+
+    With ``n_shards > 1`` the slot pool is partitioned into per-shard pools
+    of ``max_slots // n_shards`` slots each. A prefilling request is
+    assigned a home shard (the one with the most free slots, lowest index
+    on ties) and keeps it until release — recurrent state stays device-
+    local for the request's whole lifetime; only admission balances load.
+    """
 
     def __init__(self, max_slots: int = 16, continuous: bool = True,
-                 pad_decode: bool = True, prefill_bucket_min: int = 4):
+                 pad_decode: bool = True, prefill_bucket_min: int = 4,
+                 n_shards: int = 1):
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if max_slots < n_shards:
+            raise ValueError(
+                f"max_slots={max_slots} < n_shards={n_shards}: every shard "
+                f"needs at least one lm slot")
         self.max_slots = max_slots
         self.continuous = continuous
         self.pad_decode = pad_decode
         self.prefill_bucket_min = prefill_bucket_min
+        self.n_shards = n_shards
+        # Effective capacity is slots_per_shard * n_shards: rounds *down*
+        # when max_slots does not divide (never above the configured cap).
+        self.slots_per_shard = max_slots // n_shards
         self.active: list[ServeRequest] = []    # decoding next round
-        self.slot_of: dict[int, int] = {}       # rid -> slot
-        self._free = deque(range(max_slots))
+        self.slot_of: dict[int, tuple[int, int]] = {}   # rid -> (shard, slot)
+        self._free = [deque(range(self.slots_per_shard))
+                      for _ in range(n_shards)]
         self.waiting_lm: deque[ServeRequest] = deque()
 
     def has_work(self) -> bool:
         return bool(self.active or self.waiting_lm)
 
+    def _has_free_slot(self) -> bool:
+        return any(self._free)
+
+    def _pick_shard(self) -> int:
+        """Home shard for a fresh prefill: most free slots, lowest index on
+        ties — keeps per-shard decode counts within one of each other."""
+        return max(range(self.n_shards), key=lambda s: (len(self._free[s]), -s))
+
     def plan_round(self, queue: AdmissionQueue, now: float) -> RoundPlan:
         plan = RoundPlan()
         # In-flight decodes first: every request admitted before this round
         # that still owes tokens decodes once this round.
-        plan.decodes = [LMEntry(r, self.slot_of[r.rid]) for r in self.active]
+        plan.decodes = [LMEntry(r, self.slot_of[r.rid][1],
+                                self.slot_of[r.rid][0]) for r in self.active]
 
         # Admission: continuous mode folds arrivals into the running wave;
         # wave mode only admits into an idle engine (drain-then-refill).
@@ -112,12 +158,13 @@ class ContinuousScheduler:
                     plan.singles.setdefault(req.family, []).append(req)
 
         # Prefill as many waiting lm requests as there are free slots.
-        while self.waiting_lm and self._free:
+        while self.waiting_lm and self._has_free_slot():
             req = self.waiting_lm.popleft()
-            slot = self._free.popleft()
-            self.slot_of[req.rid] = slot
+            shard = self._pick_shard()
+            slot = self._free[shard].popleft()
+            self.slot_of[req.rid] = (shard, slot)
             self.active.append(req)
-            plan.prefills.append(LMEntry(req, slot))
+            plan.prefills.append(LMEntry(req, slot, shard))
 
         # Pad the decode batch to a bucketed count: one cached plan per
         # count bucket instead of one per active-set size. (The bucketed
@@ -130,9 +177,9 @@ class ContinuousScheduler:
         return plan
 
     def release(self, req: ServeRequest) -> None:
-        """Return a finished request's slot to the pool."""
-        slot = self.slot_of.pop(req.rid)
-        self._free.append(slot)
+        """Return a finished request's slot to its home shard's pool."""
+        shard, slot = self.slot_of.pop(req.rid)
+        self._free[shard].append(slot)
         self.active = [r for r in self.active if r.rid != req.rid]
 
 
@@ -186,7 +233,8 @@ def next_feed_token(req: ServeRequest, pad_token: int = 0) -> int:
 
 
 def build_lm_feed_round_graph(plan: RoundPlan, *, pad_token: int = 0,
-                              count_bucket_min: int = 8
+                              count_bucket_min: int = COUNT_BUCKET_MIN,
+                              count: int | None = None
                               ) -> tuple[Graph | None, list[LMEntry]]:
     """Token-level round graph (the bucketed engine's lm formulation).
 
@@ -203,12 +251,20 @@ def build_lm_feed_round_graph(plan: RoundPlan, *, pad_token: int = 0,
     whole lm lifetime — any prompt-length mix, any decode phase — runs
     through one or two bucketed executables. Entry count pads to
     ``count_bucket_min`` with dummy fragments (slot 0, token 0, writeback
-    discarded), which also keeps the per-topology pack cache tiny."""
+    discarded), which also keeps the per-topology pack cache tiny.
+
+    ``count`` overrides the padded entry count: the sharded engine passes
+    the max bucket across shards so every shard's round graph — including
+    idle shards, which get all-dummy graphs — shares one topology and
+    therefore one bucket signature."""
     live = plan.prefills + plan.decodes
-    if not live:
-        return None, []
-    entries = live + [LMEntry(None, 0) for _ in range(
-        bucket_len(len(live), count_bucket_min) - len(live))]
+    if count is None:
+        if not live:
+            return None, []
+        count = bucket_len(len(live), count_bucket_min)
+    elif count < len(live):
+        raise ValueError(f"count={count} < {len(live)} live entries")
+    entries = live + [LMEntry(None, 0) for _ in range(count - len(live))]
     nodes: list[Node] = []
 
     def add(type_, inputs=(), aux=0):
@@ -225,6 +281,22 @@ def build_lm_feed_round_graph(plan: RoundPlan, *, pad_token: int = 0,
         e.cell_node = cell
         e.o_node = add("O", (cell,))
     return Graph(nodes), [e for e in entries if e.req is not None]
+
+
+def partition_singles(reqs: list[ServeRequest],
+                      n_shards: int) -> list[list[ServeRequest]]:
+    """Balance single-shot request graphs across shards by node count
+    (greedy longest-processing-time): biggest graph first onto the lightest
+    shard, ties toward the lowest shard index. Deterministic for a given
+    request list."""
+    groups: list[list[ServeRequest]] = [[] for _ in range(n_shards)]
+    loads = [0] * n_shards
+    order = sorted(reqs, key=lambda r: (-len(r.graph), r.rid))
+    for req in order:
+        s = min(range(n_shards), key=lambda i: (loads[i], i))
+        groups[s].append(req)
+        loads[s] += len(req.graph)
+    return groups
 
 
 def merge_request_graphs(reqs: list[ServeRequest]) -> tuple[Graph, list[list[int]]]:

@@ -191,6 +191,78 @@ def test_serve_time_registry_policy_reproduces_batches(tmp_path, workloads,
     assert with_reg.n_batches == in_mem.n_batches
 
 
+def test_registry_rejects_unknown_version(tmp_path, workloads, trained_tree):
+    """Version gating: a payload from a future trainer is rejected by
+    ``load`` with a clear error, and ``auto_select`` skips it instead of
+    crashing the server."""
+    import json as _json
+    import os
+
+    res, held_out = trained_tree
+    reg = PolicyRegistry(str(tmp_path))
+    fp = reg.save_result("tree", res)
+    path = os.path.join(str(tmp_path), "tree", f"{fp}.json")
+    with open(path) as f:
+        doc = _json.load(f)
+    doc["version"] = 99
+    future = os.path.join(str(tmp_path), "tree", "f" * 16 + ".json")
+    with open(future, "w") as f:
+        _json.dump(doc, f)
+    with pytest.raises(ValueError, match="version 99"):
+        reg.load("tree", "f" * 16)
+    # the known-version entry still auto-selects; the future one is skipped
+    auto = reg.auto_select("tree")
+    assert auto is not None
+    assert schedule(held_out, auto) == schedule(held_out, res.policy)
+    # a registry holding only future payloads selects nothing
+    os.remove(path)
+    assert reg.auto_select("tree") is None
+
+
+def test_auto_select_empty_registry_falls_back(tmp_path, workloads):
+    """Empty registry: auto_select returns None per family and the engine
+    falls back to the sufficient-condition heuristic."""
+    from repro.core.batching import SufficientConditionPolicy
+
+    reg = PolicyRegistry(str(tmp_path))
+    assert reg.auto_select("tree") is None
+    assert reg.entries("tree") == []
+    eng = ServeEngine(workloads, compiled=False, registry=reg)
+    assert isinstance(eng.policy_for("tree"), SufficientConditionPolicy)
+    assert isinstance(eng.policy_for("lm"), SufficientConditionPolicy)
+
+
+# -- satellite: arrival processes --------------------------------------------
+
+
+def test_synth_arrivals_processes(workloads):
+    from repro.serve import synth_arrivals, synth_trace
+
+    n, rate = 32, 4.0
+    const = synth_arrivals(n, rate, "constant")
+    assert const == [i / rate for i in range(n)]
+    pois = synth_arrivals(n, rate, "poisson", seed=0)
+    assert len(pois) == n
+    assert all(b > a for a, b in zip(pois, pois[1:]))     # strictly ordered
+    assert pois == synth_arrivals(n, rate, "poisson", seed=0)  # deterministic
+    # mean inter-arrival within 3 sigma of 1/rate
+    gaps = np.diff(np.asarray(pois))
+    assert abs(gaps.mean() - 1 / rate) < 3 * (1 / rate) / np.sqrt(n - 1)
+    burst = synth_arrivals(n, rate, "burst", burst_size=4)
+    assert burst[:4] == [0.0] * 4 and burst[4] == 1.0     # 4 at once, then gap
+    assert max(burst) <= max(const)                       # same long-run rate
+    with pytest.raises(ValueError, match="unknown arrival"):
+        synth_arrivals(4, rate, "fractal")
+    # end to end: a bursty lm trace still serves every request
+    reqs = synth_trace(["lm"], 6, 2.0, 2, workloads, arrivals="burst",
+                       burst_size=3)
+    eng = ServeEngine(workloads, compiled=False, max_slots=4)
+    eng.submit_many(reqs)
+    stats = eng.run()
+    assert stats.requests_done == 6
+    assert all(len(r.out) == 2 for r in reqs)
+
+
 def test_payload_codec_and_fingerprint_stability():
     enc = ENCODERS["sort"]
     states = [("A", "B"), (frozenset({"A", "B"}), None),

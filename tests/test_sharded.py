@@ -1,0 +1,308 @@
+"""Sharded bucketed plan execution (core/plan.py, DESIGN.md §4): the
+sharded path must be numerically identical to the single-device
+``BucketedPlanExecutor`` on chain, tree, and lattice workloads, degrade to
+per-shard dispatch when shard specs diverge, and the serve stack must
+produce identical outputs at any replica count.
+
+Device-dependent tests skip unless jax sees >= 4 devices — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI shard-smoke
+job does; the scheduler/partition/stats tests at the bottom always run).
+"""
+
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.batching import SufficientConditionPolicy
+from repro.core.executor import DynamicExecutor, ExecStats
+from repro.core.graph import Graph, Node
+from repro.core.plan import BucketedPlanExecutor, ShardedBucketedPlanExecutor
+from repro.models.workloads import make_workload
+from repro.serve import (ServeEngine, ServeStats, graph_request, lm_request,
+                         partition_singles)
+from repro.serve.queue import AdmissionQueue
+from repro.serve.scheduler import (ContinuousScheduler,
+                                   build_lm_feed_round_graph)
+
+POLICY = SufficientConditionPolicy()
+N_SHARDS = 4
+MODEL_SIZE = 8
+
+needs_devices = pytest.mark.skipif(
+    jax.device_count() < N_SHARDS,
+    reason=f"needs >= {N_SHARDS} devices "
+           f"(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def permute_aux(graph: Graph, salt: int, mod: int = 500) -> Graph:
+    """Same topology, different aux payload per shard (tokens stay in any
+    workload's vocab range)."""
+    return Graph([Node(id=n.id, type=n.type, inputs=n.inputs, op=n.op,
+                       attrs={"aux": (n.attrs.get("aux", 0) * 7 + salt) % mod})
+                  for n in graph.nodes])
+
+
+def chain_graph(wl, lengths, seed=0):
+    nodes = []
+
+    def add(t, inputs=(), aux=0):
+        nodes.append(Node(id=len(nodes), type=t, inputs=tuple(inputs),
+                          attrs={"aux": aux}))
+        return len(nodes) - 1
+
+    rng = random.Random(seed)
+    for L in lengths:
+        prev = add("S")
+        for _ in range(L):
+            e = add("E", aux=rng.randrange(wl.vocab))
+            prev = add("C", (prev, e))
+            add("O", (prev,))
+    return Graph(nodes)
+
+
+def assert_results_equal(graph, ref, res, rtol=1e-6, atol=1e-6):
+    for n in graph.nodes:
+        a, b = ref.node(n.id), res.node(n.id)
+        assert a.keys() == b.keys()
+        for f in a:
+            np.testing.assert_allclose(
+                np.asarray(a[f]), np.asarray(b[f]), rtol=rtol, atol=atol,
+                err_msg=f"node {n.id} ({graph.nodes[n.id].type}) field {f}")
+
+
+# -- sharded executor vs single-device bucketed executor ---------------------
+
+
+@needs_devices
+@pytest.mark.parametrize("name,args", [
+    ("BiLSTM-Tagger", dict(lo=4, hi=7)),
+    ("TreeLSTM", dict(leaves_lo=4, leaves_hi=5)),
+    ("LatticeLSTM", dict(lo=6, hi=8)),
+])
+def test_sharded_matches_single_device(name, args):
+    """The tentpole pin: K same-topology graphs (different aux payloads)
+    run as one shard_map dispatch and match the single-device bucketed
+    executor shard for shard."""
+    rng = random.Random(0)
+    wl = make_workload(name, MODEL_SIZE)
+    base = wl.sample_graph(rng, 1, **args)
+    graphs = [permute_aux(base, s) for s in range(N_SHARDS)]
+    ex = ShardedBucketedPlanExecutor(wl.impls, None, n_shards=N_SHARDS)
+    stats = ExecStats()
+    results = ex.run_sharded(graphs, POLICY, stats)
+    assert ex.n_sharded_dispatches == 1
+    assert ex.n_fallback_rounds == 0
+    assert stats.n_launches == 1           # one dispatch for all K shards
+    single = BucketedPlanExecutor(wl.impls, None)
+    for g, res in zip(graphs, results):
+        assert_results_equal(g, single.run(g, POLICY), res)
+
+
+@needs_devices
+def test_sharded_same_bucket_different_topologies():
+    """Chains of 5/6/7/5 share one bucket signature: still one dispatch."""
+    wl = make_workload("ChainLM", MODEL_SIZE)
+    graphs = [chain_graph(wl, (L,), seed=s)
+              for s, L in enumerate((5, 6, 7, 5))]
+    ex = ShardedBucketedPlanExecutor(wl.impls, None, n_shards=N_SHARDS)
+    results = ex.run_sharded(graphs, POLICY)
+    assert ex.n_sharded_dispatches == 1 and ex.n_fallback_rounds == 0
+    ref = DynamicExecutor(wl.impls, None)
+    for g, res in zip(graphs, results):
+        assert_results_equal(g, ref.run(g, POLICY), res, rtol=1e-5, atol=1e-5)
+
+
+@needs_devices
+def test_sharded_spec_mismatch_falls_back():
+    """Shards in different buckets (or idle) degrade to per-shard dispatch
+    through the inherited single-device path — correct, just not one
+    collective dispatch."""
+    wl = make_workload("ChainLM", MODEL_SIZE)
+    graphs = [chain_graph(wl, (5,)), chain_graph(wl, (12,)),
+              None, chain_graph(wl, (5,), seed=3)]
+    ex = ShardedBucketedPlanExecutor(wl.impls, None, n_shards=N_SHARDS)
+    results = ex.run_sharded(graphs, POLICY)
+    assert ex.n_fallback_rounds == 1 and ex.n_sharded_dispatches == 0
+    assert results[2] is None
+    ref = DynamicExecutor(wl.impls, None)
+    for g, res in zip(graphs, results):
+        if g is not None:
+            assert_results_equal(g, ref.run(g, POLICY), res,
+                                 rtol=1e-5, atol=1e-5)
+
+
+@needs_devices
+def test_sharded_executables_keyed_by_shard_count():
+    """The bucket signature carries n_shards: a sharded build and a
+    single-device build of the same topology are distinct cache entries."""
+    wl = make_workload("ChainLM", MODEL_SIZE)
+    ex = ShardedBucketedPlanExecutor(wl.impls, None, n_shards=N_SHARDS)
+    g = chain_graph(wl, (5,))
+    ex.run_sharded([permute_aux(g, s, wl.vocab) for s in range(N_SHARDS)],
+                   POLICY)
+    ex.run(g, POLICY)          # inherited single-device path
+    shard_counts = sorted(key[1].n_shards for key in ex._exes)
+    assert shard_counts == [1, N_SHARDS]
+
+
+@needs_devices
+def test_sharded_shard_params_slot_pool():
+    """Per-shard params (the serve slot pool pattern): each shard's R nodes
+    must read its own slice of the stacked pool."""
+    import jax.numpy as jnp
+
+    wl = make_workload("ChainLM", MODEL_SIZE)
+    nodes = []
+
+    def add(t, inputs=(), aux=0):
+        nodes.append(Node(id=len(nodes), type=t, inputs=tuple(inputs),
+                          attrs={"aux": aux}))
+        return len(nodes) - 1
+
+    r = add("R", aux=1)                    # read slot 1 of the home shard
+    e = add("E", aux=7)
+    c = add("C", (r, e))
+    add("O", (c,))
+    g = Graph(nodes)
+
+    nrng = np.random.default_rng(0)
+    pool = {f: jnp.asarray(nrng.standard_normal(
+                (N_SHARDS, 2, MODEL_SIZE)), jnp.float32)
+            for f in wl.state_fields}
+    ex = ShardedBucketedPlanExecutor(wl.impls, None, n_shards=N_SHARDS)
+    results = ex.run_sharded([g] * N_SHARDS, POLICY,
+                             shard_params={"slots": pool})
+    assert ex.n_sharded_dispatches == 1
+    single = BucketedPlanExecutor(wl.impls, None)
+    for s, res in enumerate(results):
+        mine = {f: v[s] for f, v in pool.items()}
+        ref = single.run(g, POLICY, params={"slots": mine})
+        assert_results_equal(g, ref, res)
+
+
+# -- sharded serve engine -----------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def workloads():
+    return {"lm": make_workload("ChainLM", MODEL_SIZE),
+            "tree": make_workload("TreeLSTM", MODEL_SIZE),
+            "lattice": make_workload("LatticeLSTM", MODEL_SIZE)}
+
+
+def mixed_trace(workloads, seed=0):
+    rng = random.Random(seed)
+    nrng = np.random.default_rng(seed)
+    reqs = [lm_request(list(map(int, nrng.integers(0, 256, 3 + i % 4))),
+                       max_new=4, arrival=i * 0.5) for i in range(8)]
+    reqs.append(graph_request(
+        "tree", workloads["tree"].sample_graph(rng, 1, leaves_lo=3,
+                                               leaves_hi=5), arrival=0.0))
+    reqs.append(graph_request(
+        "lattice", workloads["lattice"].sample_graph(rng, 1, lo=4, hi=6),
+        arrival=1.0))
+    return reqs
+
+
+@needs_devices
+def test_engine_outputs_identical_across_replica_counts(workloads):
+    """Replica scaling is invisible to request outputs: same tokens, same
+    single-shot logits, all requests complete; lm rounds run as one
+    sharded dispatch and tokens balance across shards."""
+    def run(n_shards):
+        eng = ServeEngine(workloads, compiled=True, bucketed=True,
+                          continuous=True, max_slots=8, n_shards=n_shards)
+        reqs = mixed_trace(workloads)
+        eng.submit_many(reqs)
+        return reqs, eng.run()
+
+    base, s1 = run(1)
+    shard, s4 = run(N_SHARDS)
+    for a, b in zip(base, shard):
+        if a.family == "lm":
+            assert a.out == b.out
+        else:
+            np.testing.assert_allclose(np.asarray(a.result),
+                                       np.asarray(b.result),
+                                       rtol=1e-5, atol=1e-5)
+    assert s4.requests_done == s1.requests_done
+    assert s4.tokens_out == s1.tokens_out
+    assert s4.n_shards == N_SHARDS
+    assert s4.n_sharded_dispatches > 0
+    assert sum(s4.shard_tokens) == s4.tokens_out
+    # home-shard balance: admission spreads lm work within one slot of even
+    assert max(s4.shard_tokens) - min(s4.shard_tokens) <= 8
+
+
+@needs_devices
+def test_engine_rejects_sharding_off_bucketed_path(workloads):
+    with pytest.raises(ValueError, match="bucketed"):
+        ServeEngine(workloads, compiled=False, n_shards=2)
+
+
+# -- always-run: scheduler sharding, partitioning, stats merge ---------------
+
+
+def test_scheduler_pins_home_shard_and_releases():
+    # pad_decode=False mirrors the bucketed/sharded engine configuration
+    sched = ContinuousScheduler(max_slots=8, n_shards=4, pad_decode=False)
+    assert sched.slots_per_shard == 2
+    q = AdmissionQueue()
+    reqs = [lm_request([1, 2], max_new=2, arrival=0.0) for _ in range(6)]
+    for r in reqs:
+        q.submit(r)
+    plan = sched.plan_round(q, now=0.0)
+    shards = [e.shard for e in plan.prefills]
+    # 6 prefills over 4 shards: balanced 2/2/1/1
+    assert sorted(np.bincount(shards, minlength=4).tolist()) == [1, 1, 2, 2]
+    homes = dict(sched.slot_of)
+    plan2 = sched.plan_round(q, now=1.0)
+    # decode entries keep the assigned (shard, slot) pair
+    for e in plan2.decodes:
+        assert homes[e.req.rid] == (e.shard, e.slot)
+    for r in reqs:
+        sched.release(r)
+    assert all(len(f) == sched.slots_per_shard for f in sched._free)
+
+
+def test_partition_singles_balances_by_node_count(workloads):
+    rng = random.Random(0)
+    reqs = [graph_request("tree", workloads["tree"].sample_graph(
+        rng, 1, leaves_lo=3, leaves_hi=8)) for _ in range(9)]
+    groups = partition_singles(reqs, 3)
+    assert sorted(r.rid for g in groups for r in g) == \
+        sorted(r.rid for r in reqs)
+    loads = [sum(len(r.graph) for r in g) for g in groups]
+    biggest = max(len(r.graph) for r in reqs)
+    assert max(loads) - min(loads) <= biggest     # greedy LPT bound
+    # deterministic for a fixed request list
+    assert [[r.rid for r in g] for g in groups] == \
+        [[r.rid for r in g] for g in partition_singles(reqs, 3)]
+
+
+def test_feed_round_graph_explicit_count():
+    from repro.serve.scheduler import LMEntry, RoundPlan
+
+    # an idle shard's all-empty plan still builds an all-dummy graph
+    g, live = build_lm_feed_round_graph(RoundPlan(), count=8)
+    assert g is not None and live == []
+    assert len(g) == 8 * 4               # R, E, C, O per entry
+    with pytest.raises(ValueError, match="live entries"):
+        req = lm_request([1], max_new=1)
+        p = RoundPlan()
+        p.decodes = [LMEntry(req, 0), LMEntry(req, 1)]
+        build_lm_feed_round_graph(p, count=1)
+
+
+def test_servestats_merged():
+    a = ServeStats(n_rounds=5, tokens_out=10, requests_done=2,
+                   latency_s=[1.0], ttft_s=[0.5])
+    b = ServeStats(n_rounds=3, tokens_out=7, requests_done=1,
+                   latency_s=[2.0], ttft_s=[0.25])
+    m = ServeStats.merged([a, b])
+    assert m.tokens_out == 17 and m.requests_done == 3
+    assert m.n_rounds == 5                    # shards share rounds: max
+    assert sorted(m.latency_s) == [1.0, 2.0]
+    assert sorted(m.ttft_s) == [0.25, 0.5]
