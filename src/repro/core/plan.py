@@ -416,11 +416,16 @@ class CompiledPlan:
     def __init__(self, graph: Graph, sched: Schedule,
                  impls: dict[TypeId, NodeImpl], *, layout: str = "planned",
                  max_pq_vars: int = 512, pq_chunk: bool = True,
-                 donate: bool = False, gather_interpret: bool = False):
+                 donate: bool = False, gather_interpret: bool = False,
+                 compile_hook: Callable[[Any], None] | None = None):
         t0 = time.perf_counter()
         self.impls = impls
         self.donate = donate
         self.gather_interpret = gather_interpret
+        # Called with the cache key on every executable-cache miss, before
+        # the XLA compile runs; raising aborts the build with no cache entry
+        # written. The serve fault injector hangs off this.
+        self.compile_hook = compile_hook
         low = lower_schedule(graph, sched, impls, layout=layout,
                              max_pq_vars=max_pq_vars, pq_chunk=pq_chunk)
         self.steps = low.steps
@@ -488,6 +493,8 @@ class CompiledPlan:
         entry = self._exes.get(key)
         if entry is not None:
             return key
+        if self.compile_hook is not None:
+            self.compile_hook(key)
         t0 = time.perf_counter()
         shapes = jax.eval_shape(lambda p, a: self._body(p, a, {}),
                                 params, aux_flat)
@@ -527,7 +534,8 @@ class PlanExecutor:
                  layout: str = "planned", max_pq_vars: int = 512,
                  pq_chunk: bool = True, donate: bool = False,
                  gather_interpret: bool = False,
-                 cache: FIFOCache | None = None, namespace: Any = None):
+                 cache: FIFOCache | None = None, namespace: Any = None,
+                 compile_hook: Callable[[Any], None] | None = None):
         self.impls = impls
         self.params = params
         self.layout = layout
@@ -535,6 +543,7 @@ class PlanExecutor:
         self.pq_chunk = pq_chunk
         self.donate = donate
         self.gather_interpret = gather_interpret
+        self.compile_hook = compile_hook
         # FIFO-capped: each entry pins a policy, the lowered steps, AOT
         # executables, and arena pools — an unbounded topology stream must
         # not grow host/device memory forever. The serve layer passes one
@@ -559,7 +568,8 @@ class PlanExecutor:
                                 max_pq_vars=self.max_pq_vars,
                                 pq_chunk=self.pq_chunk,
                                 donate=self.donate,
-                                gather_interpret=self.gather_interpret)
+                                gather_interpret=self.gather_interpret,
+                                compile_hook=self.compile_hook)
             self._plans[key] = plan
             if stats is not None:
                 stats.schedule_time += t1 - t0
@@ -823,7 +833,8 @@ class BucketedPlanExecutor:
                  ladder: tuple[int, ...] | None = None,
                  pad_steps: bool = True,
                  pack_cache: FIFOCache | None = None,
-                 exe_cache: FIFOCache | None = None, namespace: Any = None):
+                 exe_cache: FIFOCache | None = None, namespace: Any = None,
+                 compile_hook: Callable[[Any], None] | None = None):
         self.impls = impls
         self.params = params
         self.layout = layout
@@ -835,6 +846,10 @@ class BucketedPlanExecutor:
         self.fused_interpret = fused_interpret
         self.ladder = tuple(ladder) if ladder else None
         self.pad_steps = pad_steps
+        # Consulted with the executable-cache key on every miss, before the
+        # XLA build; raising aborts the compile with the cache untouched —
+        # the serve degradation ladder's compile-failure injection point.
+        self.compile_hook = compile_hook
         # Packs are cheap (host-side numpy); executables are the expensive
         # entries and are LRU-kept so hot buckets survive topology churn.
         self._packs = pack_cache if pack_cache is not None else FIFOCache(256)
@@ -875,6 +890,8 @@ class BucketedPlanExecutor:
         entry = self._exes.get(key)
         if entry is not None:
             return key, entry, 0.0
+        if self.compile_hook is not None:
+            self.compile_hook(key)
         t0 = time.perf_counter()
         prog = _BucketProgram(pack.spec, self.impls,
                               gather_interpret=self.gather_interpret,
@@ -1008,6 +1025,8 @@ class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
         entry = self._exes.get(key)
         if entry is not None:
             return key, entry, 0.0
+        if self.compile_hook is not None:
+            self.compile_hook(key)
         t0 = time.perf_counter()
         prog = _BucketProgram(sspec, self.impls,
                               gather_interpret=self.gather_interpret,

@@ -146,6 +146,21 @@ def main(argv=None):
                     help="persistent XLA compilation cache dir (residual "
                          "per-bucket compiles survive process restarts)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request SLO in virtual ms (1 scheduler round "
+                         "≈ 1 virtual ms): deadline = arrival + this; "
+                         "requests past it return partial results with "
+                         "status TIMED_OUT. 0 disables deadlines")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="bound the admission queue: submits past this many "
+                         "pending requests are shed with status REJECTED. "
+                         "0 = unbounded")
+    ap.add_argument("--inject-faults", default="", metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'compile_fail=2,exec_rounds=3:7,slow=5*4.0,"
+                         "poison=2' — fail the first N compiles, raise at "
+                         "the listed engine rounds, burn extra virtual time "
+                         "at a round, and mix in N malformed request graphs")
     ap.add_argument("--trace", default="", help="JSON trace file")
     ap.add_argument("--registry", default="", help="policy registry dir")
     ap.add_argument("--train-policy", action="store_true",
@@ -199,12 +214,31 @@ def main(argv=None):
                            workloads, args.seed, arrivals=args.arrivals,
                            burst_size=args.burst_size)
 
+    injector = None
+    if args.inject_faults:
+        from repro.serve.faults import FaultInjector, poison_requests
+        injector = FaultInjector.from_spec(args.inject_faults)
+        if injector.poison:
+            fam = next((f for f in ("tree", "lattice") if f in workloads),
+                       None)
+            if fam is None:
+                print("# poison=N needs a single-shot family "
+                      "(tree/lattice) in --families; skipping poison")
+            else:
+                reqs += poison_requests(injector.poison, family=fam,
+                                        arrival=1.0)
+    if args.deadline_ms > 0:
+        for r in reqs:
+            r.deadline = r.arrival + args.deadline_ms
+
     eng = ServeEngine(workloads, compiled=args.plan != "interpreted",
                       bucketed=args.plan == "bucketed",
                       continuous=args.mode == "continuous",
                       max_slots=args.max_slots, model_size=args.model_size,
                       seed=args.seed, registry=registry,
-                      n_shards=args.devices)
+                      n_shards=args.devices,
+                      queue_cap=args.queue_cap or None,
+                      fault_injector=injector)
     eng.submit_many(reqs)
     stats = eng.run()
 
@@ -227,6 +261,17 @@ def main(argv=None):
           f"{pct['p95_latency_s'] * 1e3:.0f}/"
           f"{pct['p99_latency_s'] * 1e3:.0f} ms, "
           f"ttft p50 {pct['p50_ttft_s'] * 1e3:.0f} ms")
+    tiers = " ".join(f"{t}={n}" for t, n in
+                     sorted(stats.tier_rounds.items())) or "none"
+    print(f"tier rounds: {tiers}; failed {stats.requests_failed}, "
+          f"timed out {stats.requests_timed_out}, "
+          f"rejected {stats.requests_rejected}; "
+          f"{stats.n_contained_errors} contained errors, "
+          f"{stats.n_quarantine_events} quarantine events")
+    if registry is not None and registry.diagnostics:
+        for fam, bad in sorted(registry.diagnostics.items()):
+            for d in bad:
+                print(f"# registry[{fam}] skipped {d['path']}: {d['error']}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(stats.as_dict(), f, indent=1)

@@ -37,6 +37,17 @@ round-driven engine over the typed-graph executors:
 LM recurrent state lives in a fixed slot pool threaded through executor
 ``params`` (see ``models/chains.py:ChainLM``), so one AOT executable serves
 every decode round of a given (padded) width.
+
+The engine is fault-isolated rather than fail-stop (DESIGN.md §5):
+requests are validated at admission and failures are contained at request
+granularity; rounds degrade down a ladder (sharded -> per-shard bucketed ->
+interpreted, with failing bucket signatures quarantined under capped-retry
+backoff) instead of aborting; per-request deadlines are enforced at round
+boundaries (timed-out requests keep partial results); a bounded admission
+queue sheds load with an explicit ``REJECTED`` status; and exceeding
+``max_rounds`` drains gracefully instead of raising. Every request ends in
+exactly one terminal state. ``serve/faults.py`` provides the deterministic
+fault injector the whole ladder is tested under.
 """
 
 from __future__ import annotations
@@ -55,7 +66,10 @@ from repro.core.plan import (BucketedPlanExecutor, PlanExecutor,
                              ShardedBucketedPlanExecutor)
 from repro.models.workloads import SERVE_FAMILIES, make_workload
 
-from .queue import AdmissionQueue, ServeRequest
+from .faults import (BAD_TOPOLOGY, DEADLINE_EXCEEDED, EXEC_ERROR,
+                     ROUND_BUDGET_EXCEEDED, Quarantine, validate_request)
+from .queue import (COMPLETED, FAILED, TIMED_OUT, AdmissionQueue,
+                    ServeRequest)
 from .scheduler import (COUNT_BUCKET_MIN, ContinuousScheduler, RoundPlan,
                         bucket_len, build_lm_feed_round_graph,
                         build_lm_round_graph, merge_request_graphs,
@@ -86,6 +100,15 @@ class ServeStats:
     n_shards: int = 1
     n_sharded_dispatches: int = 0   # rounds served by one shard_map dispatch
     n_shard_fallback_rounds: int = 0  # rounds degraded to per-shard dispatch
+    # Fault accounting (DESIGN.md §5). ``tier_rounds`` maps degradation tier
+    # ("sharded" / "bucketed" / "plan" / "interpreted") to family-rounds
+    # served at that tier.
+    requests_failed: int = 0      # terminal FAILED (validation / exec / drain)
+    requests_timed_out: int = 0   # terminal TIMED_OUT (deadline passed)
+    requests_rejected: int = 0    # shed by the bounded admission queue
+    n_contained_errors: int = 0   # exceptions absorbed at a fault boundary
+    n_quarantine_events: int = 0  # bucket-signature quarantine bookings
+    tier_rounds: dict[str, int] = field(default_factory=dict)
     shard_tokens: list[int] = field(default_factory=list)  # lm tokens per shard
     latency_s: list[float] = field(default_factory=list)   # admit -> done
     ttft_s: list[float] = field(default_factory=list)      # admit -> first out
@@ -94,7 +117,9 @@ class ServeStats:
                "outputs_out", "requests_done", "plan_cache_hits",
                "plan_cache_misses", "sched_cache_hits", "sched_cache_misses",
                "bucket_cache_hits", "bucket_cache_misses",
-               "n_sharded_dispatches", "n_shard_fallback_rounds")
+               "n_sharded_dispatches", "n_shard_fallback_rounds",
+               "requests_failed", "requests_timed_out", "requests_rejected",
+               "n_contained_errors", "n_quarantine_events")
     # Shards serve the same rounds concurrently, so wall-clock style fields
     # take the max across parts (like n_rounds), never the sum — summing
     # would inflate them K-fold and understate tok_per_s.
@@ -113,6 +138,8 @@ class ServeStats:
                 setattr(out, f, max(getattr(out, f), getattr(p, f)))
             for f in cls._SUMMED:
                 setattr(out, f, getattr(out, f) + getattr(p, f))
+            for tier, n in p.tier_rounds.items():
+                out.tier_rounds[tier] = out.tier_rounds.get(tier, 0) + n
             out.latency_s.extend(p.latency_s)
             out.ttft_s.extend(p.ttft_s)
         return out
@@ -165,7 +192,9 @@ class ServeEngine:
                  bucket_ladder: tuple[int, ...] | None = (8,),
                  donate: bool = False,
                  n_shards: int = 1, mesh: Any = None,
-                 max_rounds: int = 100_000):
+                 max_rounds: int = 100_000,
+                 queue_cap: int | None = None,
+                 fault_injector: Any = None):
         self.compiled = compiled
         self.bucketed = bucketed
         self.n_shards = int(n_shards)
@@ -184,7 +213,14 @@ class ServeEngine:
         self.layout = layout
         self.donate = donate
         self.max_rounds = max_rounds
-        self.queue = AdmissionQueue()
+        # Fault-tolerance plumbing (DESIGN.md §5): a bounded queue sheds
+        # load, the injector (tests/benchmarks only) arms deterministic
+        # failures, the quarantine books failing bucket signatures out of
+        # the compiled path under capped-retry backoff.
+        self.queue = AdmissionQueue(max_pending=queue_cap)
+        self._injector = fault_injector
+        self.quarantine = Quarantine()
+        self._interp_executors: dict[str, Any] = {}
         # The feed-graph path pads the *total* entry count itself, so the
         # scheduler's decode-count padding would only compound (dummy
         # fragments padded again on top of dummies).
@@ -246,6 +282,8 @@ class ServeEngine:
             # BucketedPack, bucket-executable entry) pins the impls dict,
             # so its id cannot be recycled while entries live.
             ns = (name, id(wl.impls))
+            hook = (self._injector.on_compile if self._injector is not None
+                    else None)
             if self.compiled and self.bucketed and self.n_shards > 1:
                 # n_shards rides along so the executor validates it against
                 # the mesh size at construction (a caller-supplied mesh of
@@ -255,18 +293,19 @@ class ServeEngine:
                     n_shards=self.n_shards,
                     layout=self.layout, donate=self.donate,
                     ladder=self.bucket_ladder, pack_cache=self.plan_cache,
-                    exe_cache=self.bucket_cache, namespace=ns)
+                    exe_cache=self.bucket_cache, namespace=ns,
+                    compile_hook=hook)
             elif self.compiled and self.bucketed:
                 ex = BucketedPlanExecutor(wl.impls, None, layout=self.layout,
                                           donate=self.donate,
                                           ladder=self.bucket_ladder,
                                           pack_cache=self.plan_cache,
                                           exe_cache=self.bucket_cache,
-                                          namespace=ns)
+                                          namespace=ns, compile_hook=hook)
             elif self.compiled:
                 ex = PlanExecutor(wl.impls, None, layout=self.layout,
                                   donate=self.donate, cache=self.plan_cache,
-                                  namespace=ns)
+                                  namespace=ns, compile_hook=hook)
             else:
                 ex = DynamicExecutor(wl.impls, None,
                                      schedule_cache=self.schedule_cache,
@@ -274,6 +313,35 @@ class ServeEngine:
             self._executors[name] = ex
             self._exec_stats[name] = ExecStats()
         return ex
+
+    def _interp_executor(self, name: str):
+        """The degradation floor: an interpreted ``DynamicExecutor`` over
+        the same impls/weights as the compiled executor, sharing the
+        engine's schedule cache (its keys are tagged apart from plan/pack
+        entries). Never fault-injected, so a degraded retry always has a
+        tier that can succeed."""
+        if not self.compiled:
+            return self._executor(name)
+        iex = self._interp_executors.get(name)
+        if iex is None:
+            wl = self.family(name)
+            iex = DynamicExecutor(wl.impls, None,
+                                  schedule_cache=self.schedule_cache,
+                                  namespace=(name, id(wl.impls)))
+            self._interp_executors[name] = iex
+        return iex
+
+    def _primary_tier(self) -> str:
+        if self.n_shards > 1:
+            return "sharded"
+        if self.compiled and self.bucketed:
+            return "bucketed"
+        if self.compiled:
+            return "plan"
+        return "interpreted"
+
+    def _note_tier(self, tier: str) -> None:
+        self.stats.tier_rounds[tier] = self.stats.tier_rounds.get(tier, 0) + 1
 
     def _data_mesh(self):
         """The shared 1-D data mesh, built lazily (first executor) so an
@@ -313,8 +381,9 @@ class ServeEngine:
         self.queue.submit(req)
         return req
 
-    def submit_many(self, reqs) -> None:
-        self.queue.submit_many(reqs)
+    def submit_many(self, reqs) -> list[ServeRequest]:
+        """Submit all; returns the rejected ones (empty when unbounded)."""
+        return self.queue.submit_many(reqs)
 
     # -- the serving loop ----------------------------------------------------
 
@@ -338,27 +407,150 @@ class ServeEngine:
                     self._now = nxt
             self.step()
             if self._round > self.max_rounds:
-                raise RuntimeError(f"serve loop exceeded {self.max_rounds} "
-                                   f"rounds; requests stuck?")
+                self._drain_round_budget()
+                break
         self.stats.wall_s += time.perf_counter() - t0
         self._fold_exec_stats()
         return self.stats
 
     def step(self) -> None:
         """One scheduler round: admit, build wave graphs, execute, feed back."""
-        plan = self.scheduler.plan_round(self.queue, self._now)
+        self._enforce_deadlines()
+        plan = self.scheduler.plan_round(self.queue, self._now,
+                                         validate=self._validate)
         tw = time.perf_counter()
+        for req, detail in plan.invalid:
+            req.admit_round = self._round
+            req.t_admit = tw
+            self._fail(req, BAD_TOPOLOGY, detail)
         for req in plan.admitted:
             # Stamped at admission, so slot-wait shows up in latency.
             req.admit_round = self._round
             req.t_admit = tw
+        self._timeout_admitted(plan)
         if not plan.empty:
             self._run_lm_round(plan)
             for fam, reqs in plan.singles.items():
                 self._run_single_shot(fam, reqs)
             self.stats.n_rounds += 1
+        if self._injector is not None:
+            # Injected slow round: burn extra virtual time so deadline
+            # enforcement can be exercised deterministically.
+            self._now += self._injector.round_delay(self._round)
         self._round += 1
         self._now = max(self._now + 1.0, float(self._round))
+
+    # -- fault boundaries ----------------------------------------------------
+
+    def _validate(self, req: ServeRequest) -> str | None:
+        """Admission gate: returns an error detail for unservable requests
+        (scheduler routes them to ``plan.invalid``). A crash inside
+        validation itself must not take the engine down either."""
+        try:
+            return validate_request(req, self.family(req.family).impls)
+        except Exception as exc:
+            return f"validation raised {exc!r}"
+
+    def _fail(self, req: ServeRequest, code: str, detail: str,
+              status: str = FAILED) -> None:
+        """Move a request to a terminal failure status, reclaim its slot,
+        and count it — the request-level containment primitive."""
+        req.mark(status, code, detail, round_=self._round)
+        req.done_round = self._round
+        req.t_done = time.perf_counter()
+        if status == TIMED_OUT:
+            self.stats.requests_timed_out += 1
+        else:
+            self.stats.requests_failed += 1
+        if req.family == "lm":
+            self.scheduler.evict(req)
+
+    def _expired(self, req: ServeRequest) -> bool:
+        return req.deadline is not None and self._now > req.deadline
+
+    def _timeout(self, req: ServeRequest) -> None:
+        self._fail(req, DEADLINE_EXCEEDED,
+                   f"deadline {req.deadline} passed at virtual time "
+                   f"{self._now}", status=TIMED_OUT)
+
+    def _enforce_deadlines(self) -> None:
+        """Round-boundary SLO check on every in-flight or slot-waiting
+        request. Timed-out lm requests keep the tokens generated so far
+        (partial results) and release their slot."""
+        for req in [r for r in self.scheduler.active if self._expired(r)]:
+            self._timeout(req)
+        for req in [r for r in self.scheduler.waiting_lm
+                    if self._expired(r)]:
+            self._timeout(req)
+
+    def _timeout_admitted(self, plan) -> None:
+        """Requests whose deadline already passed at admission (possible
+        after injected slow rounds or long queue waits) are timed out
+        before any work is spent on them."""
+        expired = [r for r in plan.admitted if self._expired(r)]
+        if not expired:
+            return
+        rids = {r.rid for r in expired}
+        plan.prefills = [e for e in plan.prefills
+                         if e.req is None or e.req.rid not in rids]
+        for fam in list(plan.singles):
+            plan.singles[fam] = [r for r in plan.singles[fam]
+                                 if r.rid not in rids]
+            if not plan.singles[fam]:
+                del plan.singles[fam]
+        for req in expired:
+            self._timeout(req)
+
+    def _drain_round_budget(self) -> None:
+        """Graceful drain at ``max_rounds``: every still-pending request is
+        failed with a structured RoundBudgetExceeded payload; completed
+        results and stats stay intact (no more fail-stop RuntimeError)."""
+        pending = (list(self.scheduler.active)
+                   + list(self.scheduler.waiting_lm) + self.queue.drain())
+        for req in pending:
+            if req.terminal or req.done:
+                continue
+            self._fail(req, ROUND_BUDGET_EXCEEDED,
+                       f"engine drained after exceeding max_rounds="
+                       f"{self.max_rounds} with the request unfinished")
+
+    # -- the degradation ladder ----------------------------------------------
+
+    def _exec_graph(self, fam: str, graph, params: Any = None):
+        """Run one round graph down the degradation ladder; returns
+        ``(result, tier)``.
+
+        The primary tier (bucketed / per-topology plan) is skipped while
+        its quarantine key — the bucket signature on the bucketed path, the
+        topology fingerprint otherwise — is booked out; a failure books it
+        (capped retries, exponential backoff) and the round falls to the
+        interpreted ``DynamicExecutor`` floor. A success clears the key,
+        so transient compile/dispatch failures recover after backoff.
+        Raises only if the floor itself fails — callers then isolate per
+        request."""
+        ex = self._executor(fam)   # also seeds self._exec_stats[fam]
+        pol = self.policy_for(fam)
+        es = self._exec_stats[fam]
+        tier = self._primary_tier()
+        if tier != "interpreted":
+            qkey = None
+            try:
+                qkey = ((fam, ex.pack_for(graph, pol, es).spec)
+                        if tier == "bucketed"
+                        else (fam, graph.topology_key()))
+                if not self.quarantine.blocks(qkey, self._round):
+                    if self._injector is not None:
+                        self._injector.on_exec(self._round, tier)
+                    res = ex.run(graph, pol, es, params=params)
+                    self.quarantine.clear(qkey)
+                    return res, tier
+            except Exception as exc:
+                if qkey is not None:
+                    self.quarantine.record_failure(qkey, self._round, exc)
+                    self.stats.n_quarantine_events += 1
+                self.stats.n_contained_errors += 1
+        res = self._interp_executor(fam).run(graph, pol, es, params=params)
+        return res, "interpreted"
 
     # -- per-family round execution -----------------------------------------
 
@@ -408,7 +600,8 @@ class ServeEngine:
             return self._run_lm_round_sharded(plan)
         wl = self.family("lm")
         pool = self._lm_pool()
-        if self.compiled and self.bucketed:
+        feed_mode = self.compiled and self.bucketed
+        if feed_mode:
             self._start_feed(plan, wl, pool)
             graph, entries = build_lm_feed_round_graph(plan)
         else:
@@ -418,9 +611,15 @@ class ServeEngine:
                        if e.req is not None]
         if graph is None:
             return
-        ex = self._executor("lm")
-        res = ex.run(graph, self.policy_for("lm"), self._exec_stats["lm"],
-                     params={"slots": pool})
+        try:
+            res, tier = self._exec_graph("lm", graph,
+                                         params={"slots": pool})
+        except Exception:
+            # Even the interpreted floor failed on the merged graph:
+            # isolate per entry so one bad request cannot starve the rest.
+            self.stats.n_contained_errors += 1
+            return self._isolate_lm_round(plan, wl, feed_mode)
+        self._note_tier(tier)
         ys = np.asarray(res.field("y", [e.o_node for e in entries]))
         toks = np.argmax(ys, axis=-1)
         # Scatter live-request cell states back into the slot pool. Dummy
@@ -431,6 +630,47 @@ class ServeEngine:
             vals = res.field(f, cell_ids)
             pool[f] = pool[f].at[slots].set(vals)
         self._feed_tokens(entries, toks, time.perf_counter(), self.stats)
+
+    def _isolate_lm_round(self, plan, wl, feed_mode: bool) -> None:
+        """Request-level lm isolation: re-run this round one live entry at
+        a time on the interpreted floor. Entries that still fail are marked
+        FAILED and evicted; the rest decode normally. Token streams are
+        unchanged — lm lanes are independent, so a 1-entry round computes
+        the same next token as the merged round would have."""
+        pool = self._lm_pool()
+        self._executor("lm")   # seeds self._exec_stats["lm"]
+        iex = self._interp_executor("lm")
+        pol = self.policy_for("lm")
+        es = self._exec_stats["lm"]
+        self._note_tier("interpreted")
+        for role, src in (("prefill", plan.prefills),
+                          ("decode", plan.decodes)):
+            for e in src:
+                if e.req is None:
+                    continue
+                sub = RoundPlan()
+                (sub.prefills if role == "prefill"
+                 else sub.decodes).append(e)
+                try:
+                    if feed_mode:
+                        g, _ = build_lm_feed_round_graph(sub)
+                    else:
+                        g = build_lm_round_graph(
+                            sub,
+                            prefill_bucket_min=self.scheduler
+                            .prefill_bucket_min)
+                    res = iex.run(g, pol, es, params={"slots": pool})
+                    tok = np.argmax(
+                        np.asarray(res.field("y", [e.o_node])), axis=-1)
+                    slot = np.asarray([e.slot], np.int32)
+                    for f in wl.state_fields:
+                        pool[f] = pool[f].at[slot].set(
+                            res.field(f, [e.cell_node]))
+                    self._feed_tokens([e], tok, time.perf_counter(),
+                                      self.stats)
+                except Exception as exc:
+                    self._fail(e.req, EXEC_ERROR,
+                               f"isolated lm round failed: {exc!r}")
 
     def _run_lm_round_sharded(self, plan) -> None:
         """One shard_map dispatch for every shard's lm fragments: per-shard
@@ -452,9 +692,19 @@ class ServeEngine:
         built = [build_lm_feed_round_graph(sp, count=target)
                  for sp in shard_plans]
         ex = self._executor("lm")
-        results = ex.run_sharded([g for g, _ in built], self.policy_for("lm"),
-                                 self._exec_stats["lm"],
-                                 shard_params={"slots": pool})
+        try:
+            if self._injector is not None:
+                self._injector.on_exec(self._round, "sharded")
+            results = ex.run_sharded([g for g, _ in built],
+                                     self.policy_for("lm"),
+                                     self._exec_stats["lm"],
+                                     shard_params={"slots": pool})
+            self._note_tier("sharded")
+        except Exception:
+            # First rung of the ladder: retry shard by shard through the
+            # inherited single-device bucketed path.
+            self.stats.n_contained_errors += 1
+            return self._lm_round_sharded_degrade(ex, built, wl, pool)
         now = time.perf_counter()
         # One combined scatter per state field across all shards (not K
         # copy-on-write pool updates): collect every live entry's (shard,
@@ -484,20 +734,79 @@ class ServeEngine:
         for entries, toks, st in fed:
             self._feed_tokens(entries, toks, now, st)
 
+    def _lm_round_sharded_degrade(self, ex, built, wl, pool) -> None:
+        """Per-shard bucketed retry after a failed shard_map dispatch.
+        A shard whose retry also fails takes only its own live entries
+        down (FAILED + evicted) — recurrent state is pinned to the home
+        shard, so other shards' requests are untouched by construction."""
+        pol = self.policy_for("lm")
+        es = self._exec_stats["lm"]
+        self._note_tier("bucketed")
+        now = time.perf_counter()
+        for s, (g, entries) in enumerate(built):
+            if g is None or not entries:
+                continue
+            st = self._shard_stats[s]
+            try:
+                mine = {"slots": {f: pool[f][s] for f in pool}}
+                res = ex.run(g, pol, es, params=mine)
+            except Exception as exc:
+                self.stats.n_contained_errors += 1
+                for e in entries:
+                    self._fail(e.req, EXEC_ERROR,
+                               f"shard {s} bucketed retry failed: {exc!r}")
+                continue
+            ys = np.asarray(res.field("y", [e.o_node for e in entries]))
+            cell_ids = [e.cell_node for e in entries]
+            slots = np.asarray([e.slot for e in entries], np.int32)
+            shards = np.full(len(entries), s, np.int32)
+            for f in wl.state_fields:
+                pool[f] = pool[f].at[shards, slots].set(
+                    jnp.asarray(res.field(f, cell_ids)))
+            self._feed_tokens(entries, np.argmax(ys, axis=-1), now, st)
+
     def _run_single_shot(self, fam: str, reqs: list[ServeRequest]) -> None:
         if not reqs:
             return
         if self.n_shards > 1:
             return self._run_single_shot_sharded(fam, reqs)
-        ex = self._executor(fam)
         graph, out_ids = merge_request_graphs(reqs)
-        res = ex.run(graph, self.policy_for(fam), self._exec_stats[fam])
+        try:
+            res, tier = self._exec_graph(fam, graph)
+        except Exception:
+            self.stats.n_contained_errors += 1
+            return self._isolate_single_shot(fam, reqs)
+        self._note_tier(tier)
         now = time.perf_counter()
         for req, ids in zip(reqs, out_ids):
             req.result = np.asarray(res.field("y", ids))
             req.t_first = now
             self.stats.outputs_out += len(ids)
             self._finish(req, now)
+
+    def _isolate_single_shot(self, fam: str, reqs: list[ServeRequest],
+                             st: ServeStats | None = None) -> None:
+        """Last-resort per-request execution on the interpreted floor: one
+        failing request in a merged wave graph must not take the round's
+        other requests with it."""
+        st = st if st is not None else self.stats
+        self._executor(fam)    # seeds self._exec_stats[fam]
+        iex = self._interp_executor(fam)
+        pol = self.policy_for(fam)
+        es = self._exec_stats[fam]
+        self._note_tier("interpreted")
+        for req in reqs:
+            try:
+                graph, out_ids = merge_request_graphs([req])
+                res = iex.run(graph, pol, es)
+                now = time.perf_counter()
+                req.result = np.asarray(res.field("y", out_ids[0]))
+                req.t_first = now
+                st.outputs_out += len(out_ids[0])
+                self._finish(req, now, st)
+            except Exception as exc:
+                self._fail(req, EXEC_ERROR,
+                           f"isolated execution failed: {exc!r}")
 
     def _run_single_shot_sharded(self, fam: str,
                                  reqs: list[ServeRequest]) -> None:
@@ -508,8 +817,35 @@ class ServeEngine:
         built = [merge_request_graphs(grp) if grp else (None, [])
                  for grp in groups]
         ex = self._executor(fam)
-        results = ex.run_sharded([g for g, _ in built], self.policy_for(fam),
+        try:
+            if self._injector is not None:
+                self._injector.on_exec(self._round, "sharded")
+            results = ex.run_sharded([g for g, _ in built],
+                                     self.policy_for(fam),
+                                     self._exec_stats[fam])
+            self._note_tier("sharded")
+        except Exception:
+            # Ladder: per-shard bucketed retry, then per-request isolation
+            # on the interpreted floor for any shard that still fails.
+            self.stats.n_contained_errors += 1
+            self._note_tier("bucketed")
+            for s, (grp, (g, out_ids)) in enumerate(zip(groups, built)):
+                if not grp:
+                    continue
+                st = self._shard_stats[s]
+                try:
+                    res = ex.run(g, self.policy_for(fam),
                                  self._exec_stats[fam])
+                    now = time.perf_counter()
+                    for req, ids in zip(grp, out_ids):
+                        req.result = np.asarray(res.field("y", ids))
+                        req.t_first = now
+                        st.outputs_out += len(ids)
+                        self._finish(req, now, st)
+                except Exception:
+                    self.stats.n_contained_errors += 1
+                    self._isolate_single_shot(fam, grp, st)
+            return
         now = time.perf_counter()
         for s, (grp, (_, out_ids)) in enumerate(zip(groups, built)):
             res, st = results[s], self._shard_stats[s]
@@ -522,6 +858,7 @@ class ServeEngine:
     def _finish(self, req: ServeRequest, now: float,
                 st: ServeStats | None = None) -> None:
         st = st if st is not None else self.stats
+        req.status = COMPLETED
         req.done_round = self._round
         req.t_done = now
         st.requests_done += 1
@@ -534,6 +871,7 @@ class ServeEngine:
 
     def _fold_exec_stats(self) -> None:
         s = self.stats
+        s.requests_rejected = self.queue.rejected
         if self.n_shards > 1:
             # Per-request accounting lived in per-shard sub-stats; merge
             # them (idempotent: absolute recompute, not accumulation).

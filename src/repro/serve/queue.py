@@ -7,6 +7,13 @@ deterministic under test, and rate-convertible for trace-driven benchmarks.
 Wall-clock timestamps (``t_admit`` / ``t_first`` / ``t_done``) are stamped by
 the engine as requests move through, and feed the latency percentiles in
 ``ServeStats``.
+
+Every request ends in exactly one terminal status: ``COMPLETED`` (full
+result), ``TIMED_OUT`` (deadline passed; partial results kept), ``FAILED``
+(validation / planning / execution error, structured payload in ``error``),
+or ``REJECTED`` (shed by a bounded queue before admission). Deadlines are
+absolute virtual times on the same clock as ``arrival`` — 1 round ≈ 1
+virtual time unit.
 """
 
 from __future__ import annotations
@@ -19,6 +26,14 @@ from typing import Any
 from repro.core.graph import Graph
 
 FAMILIES = ("lm", "tree", "lattice")
+
+# Request lifecycle states. PENDING is the only non-terminal one.
+PENDING = "PENDING"
+COMPLETED = "COMPLETED"
+FAILED = "FAILED"
+TIMED_OUT = "TIMED_OUT"
+REJECTED = "REJECTED"
+TERMINAL = (COMPLETED, FAILED, TIMED_OUT, REJECTED)
 
 _next_rid = itertools.count()
 
@@ -37,7 +52,12 @@ class ServeRequest:
     prompt: list[int] | None = None    # lm
     max_new: int = 0                   # lm
     graph: Graph | None = None         # tree / lattice
+    deadline: float | None = None      # absolute virtual time, or no SLO
     rid: int = field(default_factory=lambda: next(_next_rid))
+
+    # lifecycle
+    status: str = PENDING
+    error: dict | None = None          # structured payload when not COMPLETED
 
     # engine-filled progress / results
     out: list[int] = field(default_factory=list)   # lm: generated tokens
@@ -65,34 +85,64 @@ class ServeRequest:
             return len(self.out) >= self.max_new
         return self.result is not None
 
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL
 
-def lm_request(prompt: list[int], max_new: int,
-               arrival: float = 0.0) -> ServeRequest:
-    return ServeRequest("lm", arrival, prompt=list(prompt), max_new=max_new)
+    def mark(self, status: str, code: str, detail: str,
+             round_: int = -1) -> None:
+        """Move to a terminal non-COMPLETED status with a structured error."""
+        self.status = status
+        self.error = {"code": code, "detail": detail, "round": int(round_)}
 
 
-def graph_request(family: str, graph: Graph,
-                  arrival: float = 0.0) -> ServeRequest:
-    return ServeRequest(family, arrival, graph=graph)
+def lm_request(prompt: list[int], max_new: int, arrival: float = 0.0,
+               deadline: float | None = None) -> ServeRequest:
+    return ServeRequest("lm", arrival, prompt=list(prompt), max_new=max_new,
+                        deadline=deadline)
+
+
+def graph_request(family: str, graph: Graph, arrival: float = 0.0,
+                  deadline: float | None = None) -> ServeRequest:
+    return ServeRequest(family, arrival, graph=graph, deadline=deadline)
 
 
 class AdmissionQueue:
-    """Min-heap of pending requests ordered by (arrival, rid)."""
+    """Min-heap of pending requests ordered by (arrival, rid).
 
-    def __init__(self):
+    With ``max_pending`` set, the queue is bounded: a submit that would
+    exceed the cap is shed — the request is marked ``REJECTED`` with a
+    ``QUEUE_FULL`` error and never enters the heap. Unbounded by default,
+    preserving the original fire-hose semantics.
+    """
+
+    def __init__(self, max_pending: int | None = None):
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self._heap: list[tuple[float, int, ServeRequest]] = []
+        self.max_pending = max_pending
         self.submitted = 0
+        self.rejected = 0
 
     def __len__(self) -> int:
         return len(self._heap)
 
-    def submit(self, req: ServeRequest) -> None:
+    def submit(self, req: ServeRequest) -> bool:
+        """Enqueue ``req``; returns False (and marks it REJECTED) when a
+        bounded queue is full."""
+        if (self.max_pending is not None
+                and len(self._heap) >= self.max_pending):
+            req.mark(REJECTED, "QUEUE_FULL",
+                     f"admission queue at capacity ({self.max_pending})")
+            self.rejected += 1
+            return False
         heapq.heappush(self._heap, (req.arrival, req.rid, req))
         self.submitted += 1
+        return True
 
-    def submit_many(self, reqs) -> None:
-        for r in reqs:
-            self.submit(r)
+    def submit_many(self, reqs) -> list[ServeRequest]:
+        """Submit all; returns the rejected ones (empty when unbounded)."""
+        return [r for r in reqs if not self.submit(r)]
 
     def earliest_arrival(self) -> float | None:
         return self._heap[0][0] if self._heap else None
@@ -103,5 +153,13 @@ class AdmissionQueue:
         lm requests), not the queue's."""
         out: list[ServeRequest] = []
         while self._heap and self._heap[0][0] <= now:
+            out.append(heapq.heappop(self._heap)[2])
+        return out
+
+    def drain(self) -> list[ServeRequest]:
+        """Pop every remaining request in (arrival, rid) order, regardless
+        of arrival time. Used by the engine's graceful round-budget drain."""
+        out: list[ServeRequest] = []
+        while self._heap:
             out.append(heapq.heappop(self._heap)[2])
         return out

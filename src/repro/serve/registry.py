@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from dataclasses import dataclass
 
 from repro.core.batching import (PAYLOAD_VERSION, FSMPolicy,
@@ -49,6 +50,18 @@ class RegistryEntry:
 class PolicyRegistry:
     def __init__(self, root: str):
         self.root = root
+        # Files skipped or rejected while scanning/loading, per family:
+        # {family: [{"path": ..., "error": ...}, ...]}. A registry shared
+        # by many engines accumulates here; callers (the launcher's
+        # summary, tests) read it after auto_select to see what was
+        # ignored and why — corruption is surfaced, never fatal.
+        self.diagnostics: dict[str, list[dict]] = {}
+
+    def _diag(self, family: str, path: str, error: str) -> None:
+        self.diagnostics.setdefault(family, []).append(
+            {"path": path, "error": error})
+        warnings.warn(f"policy registry: skipping {path}: {error}",
+                      stacklevel=3)
 
     def _family_dir(self, family: str) -> str:
         return os.path.join(self.root, family)
@@ -89,6 +102,10 @@ class PolicyRegistry:
         return self.save(family, result.policy, meta)
 
     def entries(self, family: str) -> list[RegistryEntry]:
+        """Scan the family dir. Corrupt or truncated payloads are skipped
+        with a warning and recorded in ``diagnostics`` — a registry with
+        one bad file must not take auto-select (or the engine building on
+        it) down."""
         d = self._family_dir(family)
         if not os.path.isdir(d):
             return []
@@ -100,7 +117,13 @@ class PolicyRegistry:
             try:
                 with open(path) as f:
                     doc = json.load(f)
-            except (OSError, json.JSONDecodeError):
+            except (OSError, json.JSONDecodeError) as exc:
+                self._diag(family, path, f"unreadable payload: {exc}")
+                continue
+            if not isinstance(doc, dict):
+                self._diag(family, path,
+                           f"payload is {type(doc).__name__}, expected an "
+                           f"object")
                 continue
             out.append(RegistryEntry(family=family,
                                      fingerprint=fn[:-len(".json")],
@@ -150,5 +173,14 @@ class PolicyRegistry:
         # Sort by fingerprint descending first: stable min then breaks gap
         # ties toward the lexicographically latest entry, deterministically.
         entries.sort(key=lambda e: e.fingerprint, reverse=True)
-        chosen = min(entries, key=gap)
-        return self.load(family, chosen.fingerprint)
+        # Best-first: an entry that scans clean but fails to *load*
+        # (version drift between scan and open, fingerprint mismatch from
+        # bit rot) is recorded and the next-best one is tried — only a
+        # registry with no loadable entry at all returns None.
+        for chosen in sorted(entries, key=gap):
+            try:
+                return self.load(family, chosen.fingerprint)
+            except (OSError, ValueError, KeyError, TypeError,
+                    json.JSONDecodeError) as exc:
+                self._diag(family, chosen.path, f"load failed: {exc}")
+        return None

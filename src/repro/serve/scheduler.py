@@ -90,6 +90,8 @@ class RoundPlan:
     decodes: list[LMEntry] = field(default_factory=list)   # incl. dummy pads
     singles: dict[str, list[ServeRequest]] = field(default_factory=dict)
     admitted: list[ServeRequest] = field(default_factory=list)
+    # admission-time validation rejects: (request, error detail)
+    invalid: list[tuple[ServeRequest, str]] = field(default_factory=list)
 
     @property
     def empty(self) -> bool:
@@ -140,7 +142,13 @@ class ContinuousScheduler:
         ties — keeps per-shard decode counts within one of each other."""
         return max(range(self.n_shards), key=lambda s: (len(self._free[s]), -s))
 
-    def plan_round(self, queue: AdmissionQueue, now: float) -> RoundPlan:
+    def plan_round(self, queue: AdmissionQueue, now: float,
+                   validate=None) -> RoundPlan:
+        """Build this round's plan. ``validate(req) -> str | None`` is the
+        engine's admission gate: a non-None return is an error detail, and
+        the request lands in ``plan.invalid`` instead of taking a slot or
+        joining a merged round graph (fault isolation at the cheapest
+        possible boundary)."""
         plan = RoundPlan()
         # In-flight decodes first: every request admitted before this round
         # that still owes tokens decodes once this round.
@@ -151,6 +159,10 @@ class ContinuousScheduler:
         # wave mode only admits into an idle engine (drain-then-refill).
         if self.continuous or not self.has_work():
             for req in queue.admit(now):
+                detail = validate(req) if validate is not None else None
+                if detail is not None:
+                    plan.invalid.append((req, detail))
+                    continue
                 plan.admitted.append(req)
                 if req.family == "lm":
                     self.waiting_lm.append(req)
@@ -181,6 +193,17 @@ class ContinuousScheduler:
         shard, slot = self.slot_of.pop(req.rid)
         self._free[shard].append(slot)
         self.active = [r for r in self.active if r.rid != req.rid]
+
+    def evict(self, req: ServeRequest) -> None:
+        """Forcibly remove a request from the scheduler, wherever it is:
+        an in-flight decode loses its slot (reclaimed by its home shard),
+        a queued lm request just leaves the waiting line. Idempotent, so
+        failure paths can call it without tracking scheduler state."""
+        if req.rid in self.slot_of:
+            self.release(req)
+        elif any(r.rid == req.rid for r in self.waiting_lm):
+            self.waiting_lm = deque(
+                r for r in self.waiting_lm if r.rid != req.rid)
 
 
 # -- round-graph builders ----------------------------------------------------

@@ -1,0 +1,349 @@
+"""Fault-isolated serving (serve/faults.py, engine fault boundaries,
+DESIGN.md §5): admission-time validation, request-level containment, the
+degradation ladder, deadline/SLO enforcement, queue shedding, graceful
+round-budget drain, registry corruption hardening, and cache churn under
+threads. Every injected fault here is deterministic, so so are the
+assertions."""
+
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.batching import SufficientConditionPolicy
+from repro.core.cache import FIFOCache, LRUCache
+from repro.core.executor import DynamicExecutor
+from repro.core.plan import BucketedPlanExecutor
+from repro.models.workloads import make_workload
+from repro.serve import (PolicyRegistry, ServeEngine, graph_request,
+                         lm_request)
+from repro.serve.faults import (BAD_TOPOLOGY, DEADLINE_EXCEEDED, EXEC_ERROR,
+                                POISON_KINDS, QUEUE_FULL,
+                                ROUND_BUDGET_EXCEEDED, FaultInjector,
+                                InjectedFault, Quarantine, corrupt_registry,
+                                poison_requests, validate_request)
+from repro.serve.queue import (COMPLETED, FAILED, REJECTED, TERMINAL,
+                               TIMED_OUT)
+
+MODEL_SIZE = 8
+
+
+@pytest.fixture(scope="module")
+def workloads():
+    return {"lm": make_workload("ChainLM", MODEL_SIZE),
+            "tree": make_workload("TreeLSTM", MODEL_SIZE),
+            "lattice": make_workload("LatticeLSTM", MODEL_SIZE)}
+
+
+def _mixed_trace(workloads, seed=0):
+    rng = random.Random(seed)
+    nrng = np.random.default_rng(seed)
+    reqs = [lm_request(list(map(int, nrng.integers(0, 256, 4))), 3,
+                       arrival=0.0),
+            lm_request(list(map(int, nrng.integers(0, 256, 5))), 3,
+                       arrival=1.0)]
+    reqs.append(graph_request(
+        "tree", workloads["tree"].sample_graph(rng, 1, leaves_lo=3,
+                                               leaves_hi=5), arrival=0.0))
+    reqs.append(graph_request(
+        "lattice", workloads["lattice"].sample_graph(rng, 1, lo=4, hi=6),
+        arrival=1.0))
+    return reqs
+
+
+def _serve(workloads, reqs, **kw):
+    eng = ServeEngine(workloads, compiled=True, bucketed=True,
+                      continuous=True, max_slots=4, **kw)
+    eng.submit_many(reqs)
+    return eng, eng.run()
+
+
+def _assert_healthy_match(faulted, clean):
+    for a, b in zip(faulted, clean):
+        if a.status != COMPLETED or b.status != COMPLETED:
+            continue
+        if a.family == "lm":
+            assert a.out == b.out
+        else:
+            assert np.allclose(a.result, b.result, rtol=1e-4, atol=1e-5)
+
+
+# -- spec parsing and injector units ------------------------------------------
+
+
+def test_fault_spec_parse_roundtrip():
+    inj = FaultInjector.from_spec(
+        "compile_fail=2,exec_rounds=3:7,slow=5*4.0:9*2.0,poison=2")
+    assert inj.compile_fail == 2
+    assert inj.exec_fail_rounds == frozenset((3, 7))
+    assert inj.slow_rounds == {5: 4.0, 9: 2.0}
+    assert inj.poison == 2
+    # empty spec -> inert injector
+    inert = FaultInjector.from_spec("")
+    assert (inert.compile_fail, inert.poison) == (0, 0)
+    with pytest.raises(ValueError, match="unknown fault spec key"):
+        FaultInjector.from_spec("bogus=1")
+    with pytest.raises(ValueError, match="key=value"):
+        FaultInjector.from_spec("compile_fail")
+
+
+def test_injector_hooks_are_deterministic():
+    inj = FaultInjector(compile_fail=2, exec_fail_rounds=(4,),
+                        slow_rounds={3: 2.5})
+    for _ in range(2):
+        with pytest.raises(InjectedFault):
+            inj.on_compile(("lm", "sig"))
+    inj.on_compile(("lm", "sig"))          # past N: compiles succeed again
+    assert inj.fired_compile == 2
+    inj.on_exec(4, "interpreted")          # the floor is never injected
+    with pytest.raises(InjectedFault):
+        inj.on_exec(4, "bucketed")
+    inj.on_exec(4, "bucketed")             # armed once per round
+    assert inj.fired_exec == 1
+    assert inj.round_delay(3) == 2.5 and inj.round_delay(4) == 0.0
+
+
+def test_quarantine_backoff_and_permanent():
+    q = Quarantine(backoff=4, max_retries=2)
+    key = ("lm", "sig")
+    q.record_failure(key, 10, RuntimeError("x"))
+    assert q.blocks(key, 11) and not q.blocks(key, 14)   # 10 + 4*2**0
+    q.record_failure(key, 14, RuntimeError("x"))
+    assert q.blocks(key, 21) and not q.blocks(key, 22)   # 14 + 4*2**1
+    q.record_failure(key, 22, RuntimeError("x"))         # 3rd strike
+    assert q.blocks(key, 10 ** 9) and q.permanent() == 1
+    q.clear(key)
+    assert not q.blocks(key, 0) and q.permanent() == 0
+    assert q.events == 3
+
+
+# -- admission-time validation ------------------------------------------------
+
+
+def test_validation_flags_every_poison_kind(workloads):
+    impls = workloads["tree"].impls
+    reqs = poison_requests(len(POISON_KINDS))
+    details = [validate_request(r, impls) for r in reqs]
+    assert all(details), details           # each kind caught at admission
+    assert "unknown type" in details[0]
+    assert "inputs but its impl reads slot" in details[1]
+    assert "does not produce it" in details[2]
+    # a sampled (well-formed) graph passes
+    ok = graph_request("tree", workloads["tree"].sample_graph(
+        random.Random(0), 1, leaves_lo=3, leaves_hi=5))
+    assert validate_request(ok, impls) is None
+    # lm checks: empty prompt / bad token / zero budget
+    lm = lm_request([1, 2], 2)
+    assert validate_request(lm, workloads["lm"].impls) is None
+    lm.prompt = [1, -5]
+    assert "non-negative int" in validate_request(lm, workloads["lm"].impls)
+    lm.prompt, lm.max_new = [1], 0
+    assert "max_new" in validate_request(lm, workloads["lm"].impls)
+
+
+def test_poisoned_requests_fail_healthy_complete(workloads):
+    healthy = _mixed_trace(workloads)
+    poison = poison_requests(3, arrival=0.0)
+    eng, stats = _serve(workloads, healthy + poison)
+    for r in poison:
+        assert r.status == FAILED
+        assert r.error["code"] == BAD_TOPOLOGY
+        assert r.error["round"] >= 0 and r.error["detail"]
+    assert all(r.status == COMPLETED for r in healthy)
+    assert stats.requests_failed == 3
+    assert stats.requests_done == len(healthy)
+    # failed requests never reached an executor
+    assert stats.n_contained_errors == 0
+
+
+# -- the degradation ladder ---------------------------------------------------
+
+
+def test_compile_failure_degrades_then_recovers(workloads):
+    clean = _mixed_trace(workloads)
+    _serve(workloads, clean)
+    faulted = _mixed_trace(workloads)
+    eng, stats = _serve(workloads, faulted,
+                        fault_injector=FaultInjector(compile_fail=1))
+    assert all(r.status == COMPLETED for r in faulted)
+    # the failed compile quarantined its signature and the round ran on the
+    # interpreted floor; after backoff the bucketed tier recovered
+    assert stats.n_quarantine_events >= 1
+    assert stats.n_contained_errors >= 1
+    assert stats.tier_rounds.get("interpreted", 0) >= 1
+    assert stats.tier_rounds.get("bucketed", 0) >= 1
+    assert eng.quarantine.permanent() == 0
+    _assert_healthy_match(faulted, clean)
+
+
+def test_exec_failure_contained_round_level(workloads):
+    clean = _mixed_trace(workloads)
+    _serve(workloads, clean)
+    faulted = _mixed_trace(workloads)
+    eng, stats = _serve(workloads, faulted,
+                        fault_injector=FaultInjector(exec_fail_rounds=(0, 1)))
+    assert all(r.status == COMPLETED for r in faulted)
+    assert stats.n_contained_errors >= 2
+    _assert_healthy_match(faulted, clean)
+
+
+def test_exec_poison_isolated_without_validation(workloads):
+    """Bypass admission validation: a request that crashes even the
+    interpreted floor is FAILED alone; its round-mates complete."""
+    healthy = graph_request("tree", workloads["tree"].sample_graph(
+        random.Random(0), 1, leaves_lo=3, leaves_hi=5), arrival=0.0)
+    bad = poison_requests(3, arrival=0.0)[2]   # bad-field kind
+    eng = ServeEngine(workloads, compiled=True, bucketed=True,
+                      continuous=True, max_slots=4)
+    eng._validate = lambda req: None           # admission gate off
+    eng.submit_many([healthy, bad])
+    stats = eng.run()
+    assert healthy.status == COMPLETED and healthy.result is not None
+    assert bad.status == FAILED
+    assert bad.error["code"] == EXEC_ERROR
+    # merged round failed down the whole ladder, then per-request isolation
+    assert stats.n_contained_errors >= 2
+    assert stats.tier_rounds.get("interpreted", 0) >= 1
+
+
+# -- deadlines, shedding, round budget ---------------------------------------
+
+
+def test_deadline_timeout_keeps_partial_tokens(workloads):
+    slo = lm_request([5, 6, 7], 10, arrival=0.0, deadline=30.0)
+    free = lm_request([5, 6, 7], 4, arrival=0.0)     # no SLO, same rounds
+    eng, stats = _serve(workloads, [slo, free],
+                        fault_injector=FaultInjector(slow_rounds={6: 100.0}))
+    assert free.status == COMPLETED and len(free.out) == 4
+    assert slo.status == TIMED_OUT
+    assert slo.error["code"] == DEADLINE_EXCEEDED
+    assert 0 < len(slo.out) < slo.max_new            # partial results kept
+    assert stats.requests_timed_out == 1
+    # virtual clocks make the timing reproducible
+    eng2, _ = _serve(workloads, [lm_request([5, 6, 7], 10, arrival=0.0,
+                                            deadline=30.0)],
+                     fault_injector=FaultInjector(slow_rounds={6: 100.0}))
+
+
+def test_bounded_queue_sheds_with_structured_rejection(workloads):
+    reqs = _mixed_trace(workloads)
+    eng = ServeEngine(workloads, compiled=True, bucketed=True,
+                      continuous=True, max_slots=4, queue_cap=2)
+    rejected = eng.submit_many(reqs)
+    assert len(rejected) == len(reqs) - 2
+    for r in rejected:
+        assert r.status == REJECTED
+        assert r.error["code"] == QUEUE_FULL
+    stats = eng.run()
+    assert stats.requests_rejected == len(rejected)
+    admitted = [r for r in reqs if r not in rejected]
+    assert all(r.status == COMPLETED for r in admitted)
+
+
+def test_round_budget_drains_gracefully(workloads):
+    reqs = [lm_request([1, 2, 3], 50, arrival=0.0),
+            lm_request([4, 5], 50, arrival=0.0)]
+    eng, stats = _serve(workloads, reqs, max_rounds=3)
+    # no RuntimeError: the engine returned with every request terminal
+    for r in reqs:
+        assert r.status == FAILED
+        assert r.error["code"] == ROUND_BUDGET_EXCEEDED
+        assert "max_rounds=3" in r.error["detail"]
+    assert stats.requests_failed == 2
+    assert all(r.status in TERMINAL for r in reqs)
+
+
+# -- registry corruption ------------------------------------------------------
+
+
+def test_registry_skips_truncated_payload(tmp_path, workloads):
+    path = corrupt_registry(str(tmp_path), "tree")
+    reg = PolicyRegistry(str(tmp_path))
+    with pytest.warns(UserWarning, match="skipping"):
+        entries = reg.entries("tree")
+    assert entries == []
+    assert reg.auto_select("tree") is None       # diagnosed, not fatal
+    diags = reg.diagnostics["tree"]
+    assert any(d["path"] == path and "unreadable" in d["error"]
+               for d in diags)
+    # an engine built on the corrupt registry still serves
+    reqs = _mixed_trace(workloads)
+    with pytest.warns(UserWarning, match="skipping"):
+        eng, stats = _serve(workloads, reqs, registry=reg)
+    assert all(r.status == COMPLETED for r in reqs)
+
+
+# -- cache churn under threads ------------------------------------------------
+
+
+@pytest.mark.parametrize("cls", [FIFOCache, LRUCache])
+def test_cache_concurrent_get_put_evict(cls):
+    cache = cls(8)
+    n_threads, ops = 4, 300
+    errors = []
+
+    def worker(tid):
+        try:
+            for i in range(ops):
+                k = (tid, i % 13)
+                v = cache.get(k)
+                if v is not None and v != (tid, i % 13, "v"):
+                    errors.append(f"corrupt value {v} for {k}")
+                cache[k] = (tid, i % 13, "v")
+                if len(cache) > cache.maxsize:
+                    errors.append(f"over cap: {len(cache)}")
+        except Exception as exc:                     # noqa: BLE001
+            errors.append(repr(exc))
+
+    ts = [threading.Thread(target=worker, args=(t,))
+          for t in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors, errors[:5]
+    assert len(cache) <= cache.maxsize
+    assert cache.hits + cache.misses == n_threads * ops
+
+
+def test_bucket_eviction_during_concurrent_runs(workloads):
+    """Two executors share an LRU executable cache of size 1: each run
+    evicts the other's bucket signature mid-stream. Results must still
+    match the interpreted reference — eviction may cost a recompile,
+    never correctness."""
+    wl = workloads["tree"]
+    pol = SufficientConditionPolicy()
+    rng = random.Random(3)
+    graphs = [wl.sample_graph(rng, 1, leaves_lo=3, leaves_hi=6)
+              for _ in range(6)]
+    refs = [DynamicExecutor(wl.impls, None).run(g, pol) for g in graphs]
+    exe_cache = LRUCache(1)
+    exs = [BucketedPlanExecutor(wl.impls, None, exe_cache=exe_cache,
+                                namespace=("tree", i)) for i in range(2)]
+    results = [[None] * len(graphs) for _ in exs]
+    errors = []
+
+    def worker(ei):
+        try:
+            for gi, g in enumerate(graphs):
+                results[ei][gi] = exs[ei].run(g, pol)
+        except Exception as exc:                     # noqa: BLE001
+            errors.append(repr(exc))
+
+    ts = [threading.Thread(target=worker, args=(ei,))
+          for ei in range(len(exs))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors, errors
+    assert len(exe_cache) <= 1
+    for ei in range(len(exs)):
+        for gi, g in enumerate(graphs):
+            for n in g.nodes:
+                ref, got = refs[gi].node(n.id), results[ei][gi].node(n.id)
+                for f in ref:
+                    assert np.allclose(np.asarray(ref[f]),
+                                       np.asarray(got[f]),
+                                       rtol=1e-4, atol=1e-4)
