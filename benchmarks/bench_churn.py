@@ -43,8 +43,9 @@ from repro.core.plan import BucketedPlanExecutor
 from repro.models.workloads import make_workload
 from repro.serve import ServeEngine, lm_request
 
-from .common import (add_jax_cache_arg, emit, maybe_enable_jax_cache,
-                     platform_payload)
+from .common import (add_jax_cache_arg, add_obs_args, emit,
+                     maybe_enable_jax_cache, maybe_enable_obs,
+                     platform_payload, write_obs)
 
 # Prompt lengths deliberately straddle several scheduler buckets (4, 8, 16,
 # 32) and generation budgets vary, so the round-topology stream churns.
@@ -97,8 +98,7 @@ def run(out: str = "", model_size: int = 16, requests: int = 10,
         modes: tuple[str, ...] = ("interpreted", "per_topology", "bucketed"),
         ) -> dict:
     workloads = {"lm": make_workload("ChainLM", model_size, seed)}
-    result: dict = {**platform_payload(),
-                    "model_size": model_size, "requests": requests,
+    result: dict = {"model_size": model_size, "requests": requests,
                     "rate": rate, "max_slots": max_slots,
                     "prompt_lengths": list(PROMPT_LENGTHS)}
 
@@ -140,6 +140,9 @@ def run(out: str = "", model_size: int = 16, requests: int = 10,
     result["equivalence_ok"] = check_equivalence(max(model_size // 2, 8), seed)
     emit("bench_churn/equivalence", 0.0, f"equal={result['equivalence_ok']}")
 
+    # Stamped after the measured phases so the obs_metrics snapshot carries
+    # the run's counters, not an empty registry.
+    result.update(platform_payload())
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
@@ -157,13 +160,16 @@ def main(argv=None) -> int:
     ap.add_argument("--skip-baselines", action="store_true",
                     help="run only the bucketed mode (fast smoke)")
     add_jax_cache_arg(ap)
+    add_obs_args(ap)
     args = ap.parse_args(argv)
     maybe_enable_jax_cache(args)
+    maybe_enable_obs(args)
     modes = (("bucketed",) if args.skip_baselines
              else ("interpreted", "per_topology", "bucketed"))
     res = run(out=args.out, model_size=args.model_size,
               requests=args.requests, rate=args.rate,
               max_slots=args.max_slots, modes=modes)
+    write_obs(args)
     b = res["bucketed"]
     # CI gate: recurring traffic shapes must never recompile, compiles stay
     # bounded by the bucket count, outputs match the reference, and total

@@ -39,8 +39,9 @@ from repro.serve import ServeEngine, synth_trace
 from repro.serve.faults import FaultInjector, poison_requests
 from repro.serve.queue import COMPLETED, FAILED, TERMINAL
 
-from .common import (add_jax_cache_arg, emit, maybe_enable_jax_cache,
-                     platform_payload)
+from .common import (add_jax_cache_arg, add_obs_args, emit,
+                     maybe_enable_jax_cache, maybe_enable_obs,
+                     platform_payload, write_obs)
 
 FAMILIES = ["lm", "tree", "lattice"]
 
@@ -97,7 +98,7 @@ def run(out: str = "", model_size: int = 16, requests: int = 16,
         ) -> dict:
     workloads = {f: make_workload(SERVE_FAMILIES[f], model_size, seed)
                  for f in FAMILIES}
-    result: dict = {**platform_payload(), "model_size": model_size,
+    result: dict = {"model_size": model_size,
                     "requests": requests, "rate": rate, "max_new": max_new,
                     "max_slots": max_slots, "fault_spec": FAULT_SPEC,
                     "deadline": DEADLINE}
@@ -162,6 +163,9 @@ def run(out: str = "", model_size: int = 16, requests: int = 16,
                  f"CRASHED:{entry['crash']}")
 
     result["ok"] = all_ok
+    # Stamped after the measured phases so the obs_metrics snapshot carries
+    # the run's counters, not an empty registry.
+    result.update(platform_payload())
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
@@ -178,11 +182,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=4)
     ap.add_argument("--max-slots", type=int, default=8)
     add_jax_cache_arg(ap)
+    add_obs_args(ap)
     args = ap.parse_args(argv)
     maybe_enable_jax_cache(args)
+    maybe_enable_obs(args)
     res = run(out=args.out, model_size=args.model_size,
               requests=args.requests, rate=args.rate, max_new=args.max_new,
               max_slots=args.max_slots)
+    write_obs(args)
     # CI gate (fault-smoke): no engine crash anywhere, every request in a
     # terminal state, poisoned topologies contained as BAD_TOPOLOGY
     # failures, healthy outputs matching the clean run, and >= 90% of

@@ -49,8 +49,9 @@ from repro.launch.mesh import make_data_mesh                # noqa: E402
 from repro.models.workloads import make_workload            # noqa: E402
 from repro.serve import ServeEngine, synth_trace            # noqa: E402
 
-from .common import (add_jax_cache_arg, emit,               # noqa: E402
-                     maybe_enable_jax_cache, platform_payload)
+from .common import (add_jax_cache_arg, add_obs_args, emit,  # noqa: E402
+                     maybe_enable_jax_cache, maybe_enable_obs,
+                     platform_payload, write_obs)
 
 FAMILY_MIX = ["lm", "lm", "lm", "tree", "lattice"]
 
@@ -81,8 +82,7 @@ def run(out: str = "", model_size: int = 16, requests: int = 40,
                  "tree": make_workload("TreeLSTM", model_size, seed),
                  "lattice": make_workload("LatticeLSTM", model_size, seed)}
     mesh = make_data_mesh(max(replicas))
-    result: dict = {**platform_payload(mesh),
-                    "model_size": model_size, "requests": requests,
+    result: dict = {"model_size": model_size, "requests": requests,
                     "rate": rate, "max_new": max_new, "arrivals": arrivals,
                     "slots_per_shard": slots_per_shard,
                     "replicas": list(replicas), "scale": {}}
@@ -130,6 +130,9 @@ def run(out: str = "", model_size: int = 16, requests: int = 40,
          f"monotonic={result['monotonic_round_throughput']};"
          f"tokens_per_round={'/'.join(f'{t:.2f}' for t in tpr)}")
 
+    # Stamped after the measured phases so the obs_metrics snapshot carries
+    # the run's counters, not an empty registry.
+    result.update(platform_payload(mesh))
     if out:
         with open(out, "w") as f:
             json.dump(result, f, indent=1)
@@ -150,13 +153,16 @@ def main(argv=None) -> int:
     ap.add_argument("--arrivals", choices=["constant", "poisson", "burst"],
                     default="constant")
     add_jax_cache_arg(ap)
+    add_obs_args(ap)
     args = ap.parse_args(argv)
     maybe_enable_jax_cache(args)
+    maybe_enable_obs(args)
     replicas = tuple(int(x) for x in args.replicas.split(",") if x.strip())
     res = run(out=args.out, model_size=args.model_size,
               requests=args.requests, rate=args.rate, max_new=args.max_new,
               slots_per_shard=args.slots_per_shard, replicas=replicas,
               arrivals=args.arrivals)
+    write_obs(args)
     # CI gate: adding replicas must raise round throughput monotonically,
     # never change outputs, and never compile more than once per bucket
     # signature.

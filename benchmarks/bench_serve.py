@@ -32,8 +32,9 @@ from repro.core.cache import FIFOCache, LRUCache
 from repro.models.workloads import make_workload
 from repro.serve import ServeEngine, synth_trace
 
-from .common import (add_jax_cache_arg, emit, maybe_enable_jax_cache,
-                     platform_payload)
+from .common import (add_jax_cache_arg, add_obs_args, emit,
+                     maybe_enable_jax_cache, maybe_enable_obs,
+                     platform_payload, write_obs)
 
 
 def lm_trace(workloads, n, rate, max_new, seed=0):
@@ -127,10 +128,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=20)
     ap.add_argument("--rate", type=float, default=4.0)
     add_jax_cache_arg(ap)
+    add_obs_args(ap)
     args = ap.parse_args(argv)
     maybe_enable_jax_cache(args)
+    maybe_enable_obs(args)
     res = run(out=args.out, model_size=args.model_size,
               requests=args.requests, max_new=args.max_new, rate=args.rate)
+    write_obs(args)
     ok = res["speedup_tok_per_s"] >= 2.0 and res["mixed_trace_equivalent"]
     return 0 if ok else 1   # the documented acceptance bar
 

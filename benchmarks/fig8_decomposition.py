@@ -1,8 +1,21 @@
 """Fig. 8: inference time decomposition — construction / scheduling /
-execution — for the Cavs-DyNet proxy vs ED-Batch."""
+execution — for the Cavs-DyNet proxy vs ED-Batch.
+
+Two sources for the decomposition:
+
+- the default mode re-runs the workloads with ``ExecStats`` timing fields
+  (construction / scheduling / lowering / execution), as the paper does;
+- ``--from-trace TRACE.json`` recomputes the same decomposition from a
+  recorded serve trace (``--trace-out`` on the launcher or any benchmark)
+  using per-span *self time* — a span's duration minus its direct
+  children's — so nested phases (``plan.pack`` contains ``plan.schedule``
+  and ``plan.lower``) are never double-counted.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import random
 import time
 
@@ -12,6 +25,71 @@ from repro.core.rl import RLConfig, train_fsm
 from repro.models.workloads import make_workload
 
 from .common import emit, make_executor
+
+# Span-name -> Fig. 8 component mapping for --from-trace. Self time of the
+# container spans (serve.run / serve.round / round.lm / round.single) is
+# engine overhead and lands in "other".
+COMPONENTS = {
+    "schedule": ("round.schedule", "plan.schedule", "interp.schedule"),
+    "memory": ("round.pack", "plan.pack", "plan.lower", "plan.h2d",
+               "round.scatter", "round.feed"),
+    "execution": ("plan.dispatch", "plan.block", "interp.exec"),
+    "compile": ("xla.compile",),
+}
+
+
+def span_self_times(events) -> list[dict]:
+    """Complete spans annotated with ``self_us``: duration minus the summed
+    durations of *direct* children (same tid, contained in time). Spans on
+    one thread nest strictly (the tracer's stacks are thread-local), so a
+    stack sweep over start-sorted spans recovers the hierarchy."""
+    spans = [dict(e) for e in events if e.get("ph") == "X"]
+    by_tid: dict = {}
+    for s in spans:
+        by_tid.setdefault(s.get("tid", 0), []).append(s)
+    eps = 1e-3  # µs; guards against perf_counter quantization at the edges
+    for ss in by_tid.values():
+        # Parents start no later than their children and end no earlier;
+        # ties broken by duration so the longer (outer) span comes first.
+        ss.sort(key=lambda s: (s["ts"], -s["dur"]))
+        stack: list[dict] = []
+        for s in ss:
+            s["_child_us"] = 0.0
+            while stack and s["ts"] >= stack[-1]["ts"] + stack[-1]["dur"] - eps:
+                stack.pop()
+            if stack:
+                stack[-1]["_child_us"] += s["dur"]
+            stack.append(s)
+    for s in spans:
+        s["self_us"] = max(s["dur"] - s.pop("_child_us"), 0.0)
+    return spans
+
+
+def decompose_trace(path: str) -> dict:
+    """Fig. 8 components (ms of self time) from a Chrome trace-event file."""
+    with open(path) as f:
+        obj = json.load(f)
+    spans = span_self_times(obj["traceEvents"])
+    name2comp = {n: c for c, names in COMPONENTS.items() for n in names}
+    comp = {c: 0.0 for c in COMPONENTS}
+    other = attributed = 0.0
+    total_run = sum(s["dur"] for s in spans if s["name"] == "serve.run")
+    for s in spans:
+        c = name2comp.get(s["name"])
+        if c is not None:
+            comp[c] += s["self_us"]
+            attributed += s["self_us"]
+        else:
+            other += s["self_us"]
+    out = {f"{c}_ms": v / 1e3 for c, v in comp.items()}
+    out["other_ms"] = other / 1e3
+    out["total_ms"] = (attributed + other) / 1e3
+    out["n_spans"] = len(spans)
+    # Fraction of the serve loop's wall attributed to *named* component
+    # spans — the >= 0.9 bar in the obs acceptance criteria. Traces without
+    # a serve.run span (pure executor benches) report 0 coverage.
+    out["coverage"] = attributed / total_run if total_run else 0.0
+    return out
 
 
 def run(workloads=("TreeLSTM", "LatticeLSTM"), batch_size: int = 16,
@@ -66,5 +144,29 @@ def run(workloads=("TreeLSTM", "LatticeLSTM"), batch_size: int = 16,
     return rows
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--from-trace", default="", metavar="TRACE.json",
+                    help="decompose a recorded Chrome trace (from "
+                         "--trace-out) instead of re-running the workloads")
+    ap.add_argument("--plan", default="interpreted",
+                    choices=["interpreted", "compiled", "both"])
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--model-size", type=int, default=32)
+    args = ap.parse_args(argv)
+    if args.from_trace:
+        d = decompose_trace(args.from_trace)
+        emit("fig8/from-trace", d["total_ms"] * 1e3,
+             ";".join(f"{k}={d[k]:.2f}" for k in
+                      ("schedule_ms", "memory_ms", "execution_ms",
+                       "compile_ms", "other_ms"))
+             + f";coverage={d['coverage']:.2f};spans={d['n_spans']}")
+        return 0
+    run(batch_size=args.batch_size, model_size=args.model_size,
+        plan=args.plan)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    sys.exit(main())

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.tracer import Tracer, default_tracer
+
 from .batching import (Policy, Schedule, policy_cache_key, resolve_schedule)
 from .cache import FIFOCache
 from .graph import Graph, TypeId
@@ -104,7 +106,7 @@ class ExecResult:
 class DynamicExecutor:
     def __init__(self, impls: dict[TypeId, NodeImpl], params: Any, *,
                  schedule_cache: FIFOCache | None = None,
-                 namespace: Any = None):
+                 namespace: Any = None, tracer: Tracer | None = None):
         self.impls = impls
         self.params = params
         # FIFO-capped: keys hold policy fingerprints (or references), values
@@ -113,6 +115,7 @@ class DynamicExecutor:
         self._schedule_cache = (schedule_cache if schedule_cache is not None
                                 else FIFOCache(1024))
         self._ns = namespace
+        self.tracer = tracer if tracer is not None else default_tracer()
 
     def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
             stats: ExecStats | None = None,
@@ -123,46 +126,49 @@ class DynamicExecutor:
         # executors can never hand back (or be handed) the wrong artifact.
         key = ("sched", self._ns, graph.topology_key(),
                policy_cache_key(policy))
-        sched = self._schedule_cache.get(key)
-        if sched is None:
-            sched = resolve_schedule(graph, policy)
-            self._schedule_cache[key] = sched
+        with self.tracer.span("interp.schedule", cat="interp"):
+            sched = self._schedule_cache.get(key)
+            if sched is None:
+                sched = resolve_schedule(graph, policy)
+                self._schedule_cache[key] = sched
         stats.schedule_time += time.perf_counter() - t0
 
         t1 = time.perf_counter()
         params = params if params is not None else self.params
         N = len(graph)
-        # flat per-(field, shape) stores: (n_nodes, *shape) — one gather per
-        # input operand and one scatter per output field per batch.
-        bufs: dict[tuple, jnp.ndarray] = {}
-        nodes = graph.nodes
-        for t, ids in sched:
-            impl = self.impls[t]
-            idx = np.asarray(ids, np.int32)
-            inputs = []
-            for (slot, fld) in impl.in_slots:
-                src = np.asarray([nodes[i].inputs[slot] for i in ids],
-                                 np.int32)
-                shapes = {tuple(self.impls[nodes[p].type].out_fields[fld])
-                          for p in src}
-                if len(shapes) != 1:
-                    raise ValueError(
-                        f"batch of {t!r} slot {slot} field {fld!r} mixes "
-                        f"element shapes {sorted(shapes)}; such batches "
-                        f"cannot gather from one buffer")
-                inputs.append(bufs[(fld, shapes.pop())][src])
-            aux = jnp.asarray(np.asarray(
-                [n.attrs.get("aux", 0) for n in (nodes[i] for i in ids)],
-                np.int32))
-            out = impl.apply(params, inputs, aux)
-            for f, shape in impl.out_fields.items():
-                k = (f, tuple(shape))
-                if k not in bufs:
-                    bufs[k] = jnp.zeros((N,) + tuple(shape), out[f].dtype)
-                bufs[k] = bufs[k].at[idx].set(out[f])
-            stats.n_batches += 1
-            stats.n_launches += 1
-        jax.block_until_ready(list(bufs.values()))
+        with self.tracer.span("interp.exec", cat="interp",
+                              n_batches=len(sched)):
+            # flat per-(field, shape) stores: (n_nodes, *shape) — one gather
+            # per input operand and one scatter per output field per batch.
+            bufs: dict[tuple, jnp.ndarray] = {}
+            nodes = graph.nodes
+            for t, ids in sched:
+                impl = self.impls[t]
+                idx = np.asarray(ids, np.int32)
+                inputs = []
+                for (slot, fld) in impl.in_slots:
+                    src = np.asarray([nodes[i].inputs[slot] for i in ids],
+                                     np.int32)
+                    shapes = {tuple(self.impls[nodes[p].type].out_fields[fld])
+                              for p in src}
+                    if len(shapes) != 1:
+                        raise ValueError(
+                            f"batch of {t!r} slot {slot} field {fld!r} mixes "
+                            f"element shapes {sorted(shapes)}; such batches "
+                            f"cannot gather from one buffer")
+                    inputs.append(bufs[(fld, shapes.pop())][src])
+                aux = jnp.asarray(np.asarray(
+                    [n.attrs.get("aux", 0) for n in (nodes[i] for i in ids)],
+                    np.int32))
+                out = impl.apply(params, inputs, aux)
+                for f, shape in impl.out_fields.items():
+                    k = (f, tuple(shape))
+                    if k not in bufs:
+                        bufs[k] = jnp.zeros((N,) + tuple(shape), out[f].dtype)
+                    bufs[k] = bufs[k].at[idx].set(out[f])
+                stats.n_batches += 1
+                stats.n_launches += 1
+            jax.block_until_ready(list(bufs.values()))
         stats.exec_time += time.perf_counter() - t1
         return ExecResult(graph, self.impls, bufs)
 

@@ -54,6 +54,7 @@ interpreted executor remains the reference path; the equivalence suites in
 
 from __future__ import annotations
 
+import hashlib
 import time
 import warnings
 from dataclasses import dataclass, replace
@@ -65,6 +66,8 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.obs.tracer import Tracer, default_tracer
+
 from . import memplan
 from .batching import Policy, Schedule, policy_cache_key, resolve_schedule
 from .cache import FIFOCache, LRUCache
@@ -74,6 +77,13 @@ from .graph import Graph, TypeId
 ArenaKey = tuple[str, tuple[int, ...]]  # (field name, element shape)
 
 SLICE, GATHER, BROADCAST, SCATTER = "slice", "gather", "broadcast", "scatter"
+
+
+def _sig_digest(obj: Any) -> str:
+    """Short stable digest of a cache key / bucket signature — the value
+    ``xla.compile`` trace spans carry so a compile wall can be attributed
+    to a specific bucket signature across runs and dumps."""
+    return hashlib.sha1(repr(obj).encode()).hexdigest()[:12]
 
 
 def bucket_up(n: int, ladder: tuple[int, ...] | None = None) -> int:
@@ -417,7 +427,8 @@ class CompiledPlan:
                  impls: dict[TypeId, NodeImpl], *, layout: str = "planned",
                  max_pq_vars: int = 512, pq_chunk: bool = True,
                  donate: bool = False, gather_interpret: bool = False,
-                 compile_hook: Callable[[Any], None] | None = None):
+                 compile_hook: Callable[[Any], None] | None = None,
+                 tracer: Tracer | None = None):
         t0 = time.perf_counter()
         self.impls = impls
         self.donate = donate
@@ -426,6 +437,7 @@ class CompiledPlan:
         # the XLA compile runs; raising aborts the build with no cache entry
         # written. The serve fault injector hangs off this.
         self.compile_hook = compile_hook
+        self.tracer = tracer if tracer is not None else default_tracer()
         low = lower_schedule(graph, sched, impls, layout=layout,
                              max_pq_vars=max_pq_vars, pq_chunk=pq_chunk)
         self.steps = low.steps
@@ -495,27 +507,33 @@ class CompiledPlan:
             return key
         if self.compile_hook is not None:
             self.compile_hook(key)
-        t0 = time.perf_counter()
-        shapes = jax.eval_shape(lambda p, a: self._body(p, a, {}),
-                                params, aux_flat)
-        # The pool is allocated exactly once per (topology, params kind);
-        # with donation XLA writes results back into these same buffers.
-        pool = {k: jnp.zeros(s.shape, s.dtype) for k, s in shapes.items()}
-        jitted = jax.jit(self._body,
-                         donate_argnums=(2,) if self.donate else ())
-        exe = jitted.lower(params, aux_flat, pool).compile()
-        self._exes[key] = (exe, pool)
-        self.stats.n_compiles += 1
-        self.stats.compile_time_s += time.perf_counter() - t0
+        with self.tracer.span("xla.compile", cat="compile", kind="plan",
+                              sig=_sig_digest(key)) as sp:
+            t0 = time.perf_counter()
+            shapes = jax.eval_shape(lambda p, a: self._body(p, a, {}),
+                                    params, aux_flat)
+            # The pool is allocated exactly once per (topology, params kind);
+            # with donation XLA writes results back into these same buffers.
+            pool = {k: jnp.zeros(s.shape, s.dtype) for k, s in shapes.items()}
+            jitted = jax.jit(self._body,
+                             donate_argnums=(2,) if self.donate else ())
+            exe = jitted.lower(params, aux_flat, pool).compile()
+            self._exes[key] = (exe, pool)
+            self.stats.n_compiles += 1
+            dt = time.perf_counter() - t0
+            self.stats.compile_time_s += dt
+            sp.set(lower_s=dt)
         return key
 
     def execute(self, graph: Graph, params: Any = None) -> PlanResult:
         """Run the plan on ``graph`` (same topology, any aux values): exactly
         one device dispatch."""
-        aux_flat = self._aux_flat(graph)
+        with self.tracer.span("plan.h2d", cat="plan"):
+            aux_flat = self._aux_flat(graph)
         key = self._ensure_executable(params, aux_flat)
         exe, pool = self._exes[key]
-        arenas = exe(params, aux_flat, pool)
+        with self.tracer.span("plan.dispatch", cat="plan"):
+            arenas = exe(params, aux_flat, pool)
         self.n_dispatches += 1
         if self.donate:
             self._exes[key] = (exe, arenas)
@@ -535,7 +553,8 @@ class PlanExecutor:
                  pq_chunk: bool = True, donate: bool = False,
                  gather_interpret: bool = False,
                  cache: FIFOCache | None = None, namespace: Any = None,
-                 compile_hook: Callable[[Any], None] | None = None):
+                 compile_hook: Callable[[Any], None] | None = None,
+                 tracer: Tracer | None = None):
         self.impls = impls
         self.params = params
         self.layout = layout
@@ -544,6 +563,7 @@ class PlanExecutor:
         self.donate = donate
         self.gather_interpret = gather_interpret
         self.compile_hook = compile_hook
+        self.tracer = tracer if tracer is not None else default_tracer()
         # FIFO-capped: each entry pins a policy, the lowered steps, AOT
         # executables, and arena pools — an unbounded topology stream must
         # not grow host/device memory forever. The serve layer passes one
@@ -562,14 +582,18 @@ class PlanExecutor:
         plan = self._plans.get(key)
         if plan is None:
             t0 = time.perf_counter()
-            sched = resolve_schedule(graph, policy)
+            with self.tracer.span("plan.schedule", cat="plan"):
+                sched = resolve_schedule(graph, policy)
             t1 = time.perf_counter()
-            plan = CompiledPlan(graph, sched, self.impls, layout=self.layout,
-                                max_pq_vars=self.max_pq_vars,
-                                pq_chunk=self.pq_chunk,
-                                donate=self.donate,
-                                gather_interpret=self.gather_interpret,
-                                compile_hook=self.compile_hook)
+            with self.tracer.span("plan.lower", cat="plan"):
+                plan = CompiledPlan(graph, sched, self.impls,
+                                    layout=self.layout,
+                                    max_pq_vars=self.max_pq_vars,
+                                    pq_chunk=self.pq_chunk,
+                                    donate=self.donate,
+                                    gather_interpret=self.gather_interpret,
+                                    compile_hook=self.compile_hook,
+                                    tracer=self.tracer)
             self._plans[key] = plan
             if stats is not None:
                 stats.schedule_time += t1 - t0
@@ -579,11 +603,13 @@ class PlanExecutor:
     def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
             stats: ExecStats | None = None, params: Any = None) -> PlanResult:
         stats = stats if stats is not None else ExecStats()
-        plan = self.plan_for(graph, policy, stats)
+        with self.tracer.span("plan.pack", cat="plan"):
+            plan = self.plan_for(graph, policy, stats)
         compile_before = plan.stats.compile_time_s
         t1 = time.perf_counter()
         res = plan.execute(graph, params if params is not None else self.params)
-        jax.block_until_ready(list(res.arenas.values()))
+        with self.tracer.span("plan.block", cat="plan"):
+            jax.block_until_ready(list(res.arenas.values()))
         dt = time.perf_counter() - t1
         compiled_s = plan.stats.compile_time_s - compile_before
         if compiled_s > 0:
@@ -834,7 +860,8 @@ class BucketedPlanExecutor:
                  pad_steps: bool = True,
                  pack_cache: FIFOCache | None = None,
                  exe_cache: FIFOCache | None = None, namespace: Any = None,
-                 compile_hook: Callable[[Any], None] | None = None):
+                 compile_hook: Callable[[Any], None] | None = None,
+                 tracer: Tracer | None = None):
         self.impls = impls
         self.params = params
         self.layout = layout
@@ -850,6 +877,7 @@ class BucketedPlanExecutor:
         # XLA build; raising aborts the compile with the cache untouched —
         # the serve degradation ladder's compile-failure injection point.
         self.compile_hook = compile_hook
+        self.tracer = tracer if tracer is not None else default_tracer()
         # Packs are cheap (host-side numpy); executables are the expensive
         # entries and are LRU-kept so hot buckets survive topology churn.
         self._packs = pack_cache if pack_cache is not None else FIFOCache(256)
@@ -866,13 +894,17 @@ class BucketedPlanExecutor:
         pack = self._packs.get(key)
         if pack is None:
             t0 = time.perf_counter()
-            sched = resolve_schedule(graph, policy)
+            with self.tracer.span("plan.schedule", cat="plan"):
+                sched = resolve_schedule(graph, policy)
             t1 = time.perf_counter()
-            low = lower_schedule(graph, sched, self.impls, layout=self.layout,
-                                 max_pq_vars=self.max_pq_vars,
-                                 pq_chunk=self.pq_chunk)
-            pack = pack_bucketed(low, ladder=self.ladder,
-                                 pad_steps=self.pad_steps, impls=self.impls)
+            with self.tracer.span("plan.lower", cat="plan"):
+                low = lower_schedule(graph, sched, self.impls,
+                                     layout=self.layout,
+                                     max_pq_vars=self.max_pq_vars,
+                                     pq_chunk=self.pq_chunk)
+                pack = pack_bucketed(low, ladder=self.ladder,
+                                     pad_steps=self.pad_steps,
+                                     impls=self.impls)
             pack.stats.lower_time_s = time.perf_counter() - t1
             self._packs[key] = pack
             if stats is not None:
@@ -892,25 +924,34 @@ class BucketedPlanExecutor:
             return key, entry, 0.0
         if self.compile_hook is not None:
             self.compile_hook(key)
-        t0 = time.perf_counter()
-        prog = _BucketProgram(pack.spec, self.impls,
-                              gather_interpret=self.gather_interpret,
-                              fused=self.fused,
-                              fused_interpret=self.fused_interpret)
-        idx_spec = jax.ShapeDtypeStruct((pack.spec.n_index_lanes,), jnp.int32)
-        aux_spec = jax.ShapeDtypeStruct((pack.spec.n_aux_lanes,), jnp.int32)
-        shapes = jax.eval_shape(lambda p, ix, ax: prog.body(p, ix, ax, {}),
-                                params, idx_spec, aux_spec)
-        pool = {k: jnp.zeros(s.shape, s.dtype) for k, s in shapes.items()}
-        jitted = jax.jit(prog.body,
-                         donate_argnums=(3,) if self.donate else ())
-        exe = jitted.lower(params, idx_spec, aux_spec, pool).compile()
-        # The impls dict rides along to pin its id for the entry's lifetime
-        # (the AOT executable itself holds no reference to it): shared
-        # caches namespace on id(impls), which must not be recycled.
-        entry = (exe, pool, self.impls)
-        self._exes[key] = entry
-        dt = time.perf_counter() - t0
+        with self.tracer.span("xla.compile", cat="compile", kind="bucketed",
+                              bucket=_sig_digest(pack.spec),
+                              steps=len(pack.spec.steps),
+                              shards=pack.spec.n_shards) as sp:
+            t0 = time.perf_counter()
+            prog = _BucketProgram(pack.spec, self.impls,
+                                  gather_interpret=self.gather_interpret,
+                                  fused=self.fused,
+                                  fused_interpret=self.fused_interpret)
+            idx_spec = jax.ShapeDtypeStruct((pack.spec.n_index_lanes,),
+                                            jnp.int32)
+            aux_spec = jax.ShapeDtypeStruct((pack.spec.n_aux_lanes,),
+                                            jnp.int32)
+            shapes = jax.eval_shape(
+                lambda p, ix, ax: prog.body(p, ix, ax, {}),
+                params, idx_spec, aux_spec)
+            pool = {k: jnp.zeros(s.shape, s.dtype) for k, s in shapes.items()}
+            jitted = jax.jit(prog.body,
+                             donate_argnums=(3,) if self.donate else ())
+            exe = jitted.lower(params, idx_spec, aux_spec, pool).compile()
+            # The impls dict rides along to pin its id for the entry's
+            # lifetime (the AOT executable itself holds no reference to it):
+            # shared caches namespace on id(impls), which must not be
+            # recycled.
+            entry = (exe, pool, self.impls)
+            self._exes[key] = entry
+            dt = time.perf_counter() - t0
+            sp.set(lower_s=dt)
         self.n_bucket_compiles += 1
         self.compile_time_s += dt
         pack.stats.n_compiles += 1
@@ -920,14 +961,19 @@ class BucketedPlanExecutor:
     def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
             stats: ExecStats | None = None, params: Any = None) -> PlanResult:
         stats = stats if stats is not None else ExecStats()
-        pack = self.pack_for(graph, policy, stats)
+        tr = self.tracer
+        with tr.span("plan.pack", cat="plan"):
+            pack = self.pack_for(graph, policy, stats)
         params = params if params is not None else self.params
-        aux = _gather_node_aux(graph, pack.aux_perm)
+        with tr.span("plan.h2d", cat="plan"):
+            aux = _gather_node_aux(graph, pack.aux_perm)
         key, entry, compile_s = self._ensure_executable(pack, params)
         exe, pool, impls_pin = entry
         t1 = time.perf_counter()
-        arenas = exe(params, pack.idxpack, aux, pool)
-        jax.block_until_ready(list(arenas.values()))
+        with tr.span("plan.dispatch", cat="plan"):
+            arenas = exe(params, pack.idxpack, aux, pool)
+        with tr.span("plan.block", cat="plan"):
+            jax.block_until_ready(list(arenas.values()))
         dt = time.perf_counter() - t1
         if self.donate:
             self._exes[key] = (exe, arenas, impls_pin)
@@ -1027,40 +1073,47 @@ class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
             return key, entry, 0.0
         if self.compile_hook is not None:
             self.compile_hook(key)
-        t0 = time.perf_counter()
-        prog = _BucketProgram(sspec, self.impls,
-                              gather_interpret=self.gather_interpret,
-                              fused=self.fused,
-                              fused_interpret=self.fused_interpret)
-        P, axis = PartitionSpec, self.axis
+        with self.tracer.span("xla.compile", cat="compile", kind="sharded",
+                              bucket=_sig_digest(sspec),
+                              steps=len(sspec.steps),
+                              shards=sspec.n_shards) as tsp:
+            t0 = time.perf_counter()
+            prog = _BucketProgram(sspec, self.impls,
+                                  gather_interpret=self.gather_interpret,
+                                  fused=self.fused,
+                                  fused_interpret=self.fused_interpret)
+            P, axis = PartitionSpec, self.axis
 
-        def one_shard(rep, shp, idx, aux, pools):
-            # shard_map hands each device a leading-axis block of size 1;
-            # inside, the body is the single-device program verbatim.
-            def sq(t):
-                return jax.tree.map(lambda x: jnp.squeeze(x, 0), t)
+            def one_shard(rep, shp, idx, aux, pools):
+                # shard_map hands each device a leading-axis block of size 1;
+                # inside, the body is the single-device program verbatim.
+                def sq(t):
+                    return jax.tree.map(lambda x: jnp.squeeze(x, 0), t)
 
-            p = _merge_params(rep, None if shp is None else sq(shp))
-            out = prog.body(p, idx[0], aux[0], sq(pools))
-            return jax.tree.map(lambda x: x[None], out)
+                p = _merge_params(rep, None if shp is None else sq(shp))
+                out = prog.body(p, idx[0], aux[0], sq(pools))
+                return jax.tree.map(lambda x: x[None], out)
 
-        fn = shard_map(one_shard, mesh=self.mesh,
-                       in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
-                       out_specs=P(axis))
-        K = self.n_shards
-        idx_spec = jax.ShapeDtypeStruct((K, sspec.n_index_lanes), jnp.int32)
-        aux_spec = jax.ShapeDtypeStruct((K, sspec.n_aux_lanes), jnp.int32)
-        shapes = jax.eval_shape(lambda p, sp, ix, ax: fn(p, sp, ix, ax, {}),
-                                params, shard_params, idx_spec, aux_spec)
-        sharding = self.shard_sharding()
-        pool = {k: jax.device_put(jnp.zeros(s.shape, s.dtype), sharding)
-                for k, s in shapes.items()}
-        jitted = jax.jit(fn, donate_argnums=(4,) if self.donate else ())
-        exe = jitted.lower(params, shard_params, idx_spec, aux_spec,
-                           pool).compile()
-        entry = (exe, pool, self.impls)
-        self._exes[key] = entry
-        dt = time.perf_counter() - t0
+            fn = shard_map(one_shard, mesh=self.mesh,
+                           in_specs=(P(), P(axis), P(axis), P(axis), P(axis)),
+                           out_specs=P(axis))
+            K = self.n_shards
+            idx_spec = jax.ShapeDtypeStruct((K, sspec.n_index_lanes),
+                                            jnp.int32)
+            aux_spec = jax.ShapeDtypeStruct((K, sspec.n_aux_lanes), jnp.int32)
+            shapes = jax.eval_shape(
+                lambda p, sp, ix, ax: fn(p, sp, ix, ax, {}),
+                params, shard_params, idx_spec, aux_spec)
+            sharding = self.shard_sharding()
+            pool = {k: jax.device_put(jnp.zeros(s.shape, s.dtype), sharding)
+                    for k, s in shapes.items()}
+            jitted = jax.jit(fn, donate_argnums=(4,) if self.donate else ())
+            exe = jitted.lower(params, shard_params, idx_spec, aux_spec,
+                               pool).compile()
+            entry = (exe, pool, self.impls)
+            self._exes[key] = entry
+            dt = time.perf_counter() - t0
+            tsp.set(lower_s=dt)
         self.n_bucket_compiles += 1
         self.compile_time_s += dt
         return key, entry, dt
@@ -1093,12 +1146,14 @@ class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
         the stacked arenas.
         """
         stats = stats if stats is not None else ExecStats()
+        tr = self.tracer
         params = params if params is not None else self.params
         if len(graphs) != self.n_shards:
             raise ValueError(f"expected {self.n_shards} graphs (one per "
                              f"shard, None for idle), got {len(graphs)}")
-        packs = [self.pack_for(g, policy, stats) if g is not None else None
-                 for g in graphs]
+        with tr.span("plan.pack", cat="plan"):
+            packs = [self.pack_for(g, policy, stats) if g is not None
+                     else None for g in graphs]
         specs = {p.spec for p in packs if p is not None}
         if not specs:
             return [None] * self.n_shards
@@ -1107,17 +1162,18 @@ class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
                                       shard_params)
 
         sspec = replace(packs[0].spec, n_shards=self.n_shards)
-        idx = np.stack([p.idxpack_np for p in packs])
-        aux = np.stack([_node_aux_np(g, p.aux_perm)
-                        for g, p in zip(graphs, packs)])
-        if shard_params is not None:
-            # The AOT executable pins its input shardings; host-side
-            # updates (e.g. the engine's slot writeback) leave the stacked
-            # leaves on the default device, so normalize them onto the
-            # mesh. A no-op when already placed.
-            sharding = self.shard_sharding()
-            shard_params = jax.tree.map(
-                lambda x: jax.device_put(x, sharding), shard_params)
+        with tr.span("plan.h2d", cat="plan"):
+            idx = np.stack([p.idxpack_np for p in packs])
+            aux = np.stack([_node_aux_np(g, p.aux_perm)
+                            for g, p in zip(graphs, packs)])
+            if shard_params is not None:
+                # The AOT executable pins its input shardings; host-side
+                # updates (e.g. the engine's slot writeback) leave the
+                # stacked leaves on the default device, so normalize them
+                # onto the mesh. A no-op when already placed.
+                sharding = self.shard_sharding()
+                shard_params = jax.tree.map(
+                    lambda x: jax.device_put(x, sharding), shard_params)
         key, entry, compile_s = self._ensure_sharded_executable(sspec, params,
                                                                 shard_params)
         if compile_s > 0:
@@ -1128,8 +1184,10 @@ class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
             packs[0].stats.compile_time_s += compile_s
         exe, pool, impls_pin = entry
         t1 = time.perf_counter()
-        arenas = exe(params, shard_params, idx, aux, pool)
-        jax.block_until_ready(list(arenas.values()))
+        with tr.span("plan.dispatch", cat="plan"):
+            arenas = exe(params, shard_params, idx, aux, pool)
+        with tr.span("plan.block", cat="plan"):
+            jax.block_until_ready(list(arenas.values()))
         dt = time.perf_counter() - t1
         if self.donate:
             self._exes[key] = (exe, arenas, impls_pin)

@@ -37,6 +37,9 @@ import numpy as np
 
 from repro.core.rl import RLConfig, train_fsm
 from repro.models.workloads import SERVE_FAMILIES, make_workload
+from repro.obs import FlightRecorder, Obs
+from repro.obs.metrics import default_registry
+from repro.obs.tracer import default_tracer
 from repro.serve import (PolicyRegistry, ServeEngine, graph_request,
                          lm_request, synth_trace)
 
@@ -166,6 +169,15 @@ def main(argv=None):
     ap.add_argument("--train-policy", action="store_true",
                     help="train + persist FSM policies before serving")
     ap.add_argument("--out", default="", help="write ServeStats JSON here")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome/Perfetto trace-event JSON of the "
+                         "serve run here (open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write a metrics-registry snapshot JSON here")
+    ap.add_argument("--flight-dir", default="",
+                    help="write flight-recorder dumps (last-N-rounds trace "
+                         "ring) to this directory on request failure, "
+                         "timeout, or quarantine")
     ap.add_argument("--legacy-arch", default="",
                     help="serve one wave through the legacy TransformerLM "
                          "engine instead (e.g. qwen2-0.5b)")
@@ -231,6 +243,17 @@ def main(argv=None):
         for r in reqs:
             r.deadline = r.arrival + args.deadline_ms
 
+    # Observability wiring (DESIGN.md §6): --trace-out lights up the
+    # process-default tracer, --flight-dir adds an on-disk flight recorder.
+    # The engine still auto-creates an in-memory flight recorder under
+    # --inject-faults even when none of these flags are given.
+    tracer = default_tracer()
+    if args.trace_out:
+        tracer.enabled = True
+    flight = FlightRecorder(out_dir=args.flight_dir) if args.flight_dir \
+        else None
+    obs = Obs(tracer=tracer, flight=flight)
+
     eng = ServeEngine(workloads, compiled=args.plan != "interpreted",
                       bucketed=args.plan == "bucketed",
                       continuous=args.mode == "continuous",
@@ -238,7 +261,7 @@ def main(argv=None):
                       seed=args.seed, registry=registry,
                       n_shards=args.devices,
                       queue_cap=args.queue_cap or None,
-                      fault_injector=injector)
+                      fault_injector=injector, obs=obs)
     eng.submit_many(reqs)
     stats = eng.run()
 
@@ -272,6 +295,18 @@ def main(argv=None):
         for fam, bad in sorted(registry.diagnostics.items()):
             for d in bad:
                 print(f"# registry[{fam}] skipped {d['path']}: {d['error']}")
+    if eng.flight is not None and eng.flight.dumps:
+        n = len(eng.flight.dumps)
+        reasons = sorted({d["reason"] for d in eng.flight.dumps})
+        where = f" in {args.flight_dir}" if args.flight_dir else " (in-memory)"
+        print(f"# {n} flight dump(s){where}: {', '.join(reasons)}")
+    if args.trace_out:
+        tracer.write(args.trace_out)
+        print(f"# wrote {args.trace_out}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(default_registry().snapshot(), f, indent=1)
+        print(f"# wrote {args.metrics_out}")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(stats.as_dict(), f, indent=1)

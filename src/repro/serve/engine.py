@@ -63,8 +63,10 @@ from repro.core.batching import SufficientConditionPolicy
 from repro.core.cache import FIFOCache, LRUCache
 from repro.core.executor import DynamicExecutor, ExecStats
 from repro.core.plan import (BucketedPlanExecutor, PlanExecutor,
-                             ShardedBucketedPlanExecutor)
+                             ShardedBucketedPlanExecutor, _sig_digest)
 from repro.models.workloads import SERVE_FAMILIES, make_workload
+from repro.obs import FlightRecorder, Obs, Tracer
+from repro.obs.metrics import percentile
 
 from .faults import (BAD_TOPOLOGY, DEADLINE_EXCEEDED, EXEC_ERROR,
                      ROUND_BUDGET_EXCEEDED, Quarantine, validate_request)
@@ -148,15 +150,14 @@ class ServeStats:
     def tok_per_s(self) -> float:
         return self.tokens_out / max(self.wall_s, 1e-9)
 
-    def _pct(self, xs: list[float], q: float) -> float:
-        return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
-
     def latency_percentiles(self) -> dict[str, float]:
-        return {"p50_latency_s": self._pct(self.latency_s, 50),
-                "p95_latency_s": self._pct(self.latency_s, 95),
-                "p99_latency_s": self._pct(self.latency_s, 99),
-                "p50_ttft_s": self._pct(self.ttft_s, 50),
-                "p95_ttft_s": self._pct(self.ttft_s, 95)}
+        # Percentile math lives in repro.obs.metrics (matches
+        # numpy.percentile's default interpolation — pinned by tests).
+        return {"p50_latency_s": percentile(self.latency_s, 50),
+                "p95_latency_s": percentile(self.latency_s, 95),
+                "p99_latency_s": percentile(self.latency_s, 99),
+                "p50_ttft_s": percentile(self.ttft_s, 50),
+                "p95_ttft_s": percentile(self.ttft_s, 95)}
 
     def as_dict(self) -> dict:
         d = {k: v for k, v in self.__dict__.items()
@@ -194,7 +195,8 @@ class ServeEngine:
                  n_shards: int = 1, mesh: Any = None,
                  max_rounds: int = 100_000,
                  queue_cap: int | None = None,
-                 fault_injector: Any = None):
+                 fault_injector: Any = None,
+                 obs: Obs | None = None):
         self.compiled = compiled
         self.bucketed = bucketed
         self.n_shards = int(n_shards)
@@ -213,13 +215,33 @@ class ServeEngine:
         self.layout = layout
         self.donate = donate
         self.max_rounds = max_rounds
+        # Observability (DESIGN.md §6): tracer spans/events, the metrics
+        # registry, and the flight recorder all hang off one Obs bundle.
+        # Defaults are free: a disabled tracer hands out a shared no-op
+        # span, and no flight recorder is created unless faults can happen.
+        ob = obs if obs is not None else Obs()
+        self._metrics = ob.metrics
+        self._flight = ob.flight
+        if self._flight is None and fault_injector is not None:
+            # Under fault injection every FAILED/TIMED_OUT request must
+            # leave a post-mortem dump, even when the caller wired no
+            # explicit recorder.
+            self._flight = FlightRecorder()
+        tracer = ob.tracer
+        if self._flight is not None and not tracer.enabled:
+            # The flight recorder needs a live ring even when full tracing
+            # is off: a private ring-buffered tracer bounds memory to the
+            # last N rounds.
+            tracer = Tracer(enabled=True, ring=self._flight.ring + 1)
+        self.tracer = tracer
         # Fault-tolerance plumbing (DESIGN.md §5): a bounded queue sheds
         # load, the injector (tests/benchmarks only) arms deterministic
         # failures, the quarantine books failing bucket signatures out of
         # the compiled path under capped-retry backoff.
-        self.queue = AdmissionQueue(max_pending=queue_cap)
+        self.queue = AdmissionQueue(max_pending=queue_cap,
+                                    tracer=self.tracer)
         self._injector = fault_injector
-        self.quarantine = Quarantine()
+        self.quarantine = Quarantine(on_event=self._on_quarantine)
         self._interp_executors: dict[str, Any] = {}
         # The feed-graph path pads the *total* entry count itself, so the
         # scheduler's decode-count padding would only compound (dummy
@@ -252,6 +274,19 @@ class ServeEngine:
         self._pool: dict[str, jnp.ndarray] | None = None
         self._now = 0.0
         self._round = 0
+
+    # -- observability accessors ---------------------------------------------
+
+    @property
+    def metrics(self):
+        """The engine's metrics registry (the process default unless an
+        explicit ``Obs`` was passed)."""
+        return self._metrics
+
+    @property
+    def flight(self):
+        """The flight recorder, or None when faults cannot be recorded."""
+        return self._flight
 
     # -- family plumbing -----------------------------------------------------
 
@@ -294,22 +329,24 @@ class ServeEngine:
                     layout=self.layout, donate=self.donate,
                     ladder=self.bucket_ladder, pack_cache=self.plan_cache,
                     exe_cache=self.bucket_cache, namespace=ns,
-                    compile_hook=hook)
+                    compile_hook=hook, tracer=self.tracer)
             elif self.compiled and self.bucketed:
                 ex = BucketedPlanExecutor(wl.impls, None, layout=self.layout,
                                           donate=self.donate,
                                           ladder=self.bucket_ladder,
                                           pack_cache=self.plan_cache,
                                           exe_cache=self.bucket_cache,
-                                          namespace=ns, compile_hook=hook)
+                                          namespace=ns, compile_hook=hook,
+                                          tracer=self.tracer)
             elif self.compiled:
                 ex = PlanExecutor(wl.impls, None, layout=self.layout,
                                   donate=self.donate, cache=self.plan_cache,
-                                  namespace=ns, compile_hook=hook)
+                                  namespace=ns, compile_hook=hook,
+                                  tracer=self.tracer)
             else:
                 ex = DynamicExecutor(wl.impls, None,
                                      schedule_cache=self.schedule_cache,
-                                     namespace=ns)
+                                     namespace=ns, tracer=self.tracer)
             self._executors[name] = ex
             self._exec_stats[name] = ExecStats()
         return ex
@@ -327,7 +364,8 @@ class ServeEngine:
             wl = self.family(name)
             iex = DynamicExecutor(wl.impls, None,
                                   schedule_cache=self.schedule_cache,
-                                  namespace=(name, id(wl.impls)))
+                                  namespace=(name, id(wl.impls)),
+                                  tracer=self.tracer)
             self._interp_executors[name] = iex
         return iex
 
@@ -342,6 +380,26 @@ class ServeEngine:
 
     def _note_tier(self, tier: str) -> None:
         self.stats.tier_rounds[tier] = self.stats.tier_rounds.get(tier, 0) + 1
+
+    def _contained(self) -> None:
+        """Count one exception absorbed at a fault boundary (stats field
+        and metrics counter move together — cross-validated in tests)."""
+        self.stats.n_contained_errors += 1
+        self._metrics.counter("serve.contained_errors").inc()
+
+    def _on_quarantine(self, key: Any, fails: int, until: float,
+                       error: str) -> None:
+        """Quarantine booking callback: single site for the stats counter,
+        metrics, tracer event, and flight-recorder dump."""
+        self.stats.n_quarantine_events += 1
+        self._metrics.counter("serve.quarantine_events").inc()
+        sig = _sig_digest(key)
+        self.tracer.event("quarantine", cat="fault", sig=sig, fails=fails,
+                          until=until, error=error, round=self._round)
+        if self._flight is not None:
+            self._flight.dump(self.tracer, "quarantine", sig=sig,
+                              fails=fails, until=until, error=error,
+                              round=self._round)
 
     def _data_mesh(self):
         """The shared 1-D data mesh, built lazily (first executor) so an
@@ -399,44 +457,64 @@ class ServeEngine:
                             self.schedule_cache.misses,
                             self.bucket_cache.hits,
                             self.bucket_cache.misses)
-        while len(self.queue) or self.scheduler.has_work():
-            if not self.scheduler.has_work():
-                # Idle with future arrivals: fast-forward the virtual clock.
-                nxt = self.queue.earliest_arrival()
-                if nxt is not None and nxt > self._now:
-                    self._now = nxt
-            self.step()
-            if self._round > self.max_rounds:
-                self._drain_round_budget()
-                break
+        with self.tracer.span("serve.run", n_shards=self.n_shards):
+            while len(self.queue) or self.scheduler.has_work():
+                if not self.scheduler.has_work():
+                    # Idle with future arrivals: fast-forward the virtual
+                    # clock.
+                    nxt = self.queue.earliest_arrival()
+                    if nxt is not None and nxt > self._now:
+                        self._now = nxt
+                self.step()
+                if self._round > self.max_rounds:
+                    self._drain_round_budget()
+                    break
         self.stats.wall_s += time.perf_counter() - t0
         self._fold_exec_stats()
         return self.stats
 
     def step(self) -> None:
         """One scheduler round: admit, build wave graphs, execute, feed back."""
-        self._enforce_deadlines()
-        plan = self.scheduler.plan_round(self.queue, self._now,
-                                         validate=self._validate)
-        tw = time.perf_counter()
-        for req, detail in plan.invalid:
-            req.admit_round = self._round
-            req.t_admit = tw
-            self._fail(req, BAD_TOPOLOGY, detail)
-        for req in plan.admitted:
-            # Stamped at admission, so slot-wait shows up in latency.
-            req.admit_round = self._round
-            req.t_admit = tw
-        self._timeout_admitted(plan)
-        if not plan.empty:
-            self._run_lm_round(plan)
-            for fam, reqs in plan.singles.items():
-                self._run_single_shot(fam, reqs)
-            self.stats.n_rounds += 1
-        if self._injector is not None:
-            # Injected slow round: burn extra virtual time so deadline
-            # enforcement can be exercised deterministically.
-            self._now += self._injector.round_delay(self._round)
+        tr = self.tracer
+        tr.mark_round(self._round)
+        t_round = time.perf_counter()
+        with tr.span("serve.round", round=self._round):
+            self._enforce_deadlines()
+            with tr.span("round.schedule"):
+                plan = self.scheduler.plan_round(self.queue, self._now,
+                                                 validate=self._validate)
+            tw = time.perf_counter()
+            for req, detail in plan.invalid:
+                req.admit_round = self._round
+                req.t_admit = tw
+                self._fail(req, BAD_TOPOLOGY, detail)
+            for req in plan.admitted:
+                # Stamped at admission, so slot-wait shows up in latency.
+                req.admit_round = self._round
+                req.t_admit = tw
+                tr.event("req.admitted", cat="req", rid=req.rid,
+                         family=req.family, round=self._round)
+                self._metrics.histogram("serve.queue_delay_rounds").observe(
+                    max(self._now - req.arrival, 0.0))
+            self._timeout_admitted(plan)
+            for e in plan.prefills:
+                if e.req is not None:
+                    tr.event("req.prefill", cat="req", rid=e.req.rid,
+                             slot=e.slot, round=self._round)
+            if not plan.empty:
+                with tr.span("round.lm"):
+                    self._run_lm_round(plan)
+                for fam, reqs in plan.singles.items():
+                    with tr.span("round.single", family=fam, n=len(reqs)):
+                        self._run_single_shot(fam, reqs)
+                self.stats.n_rounds += 1
+                self._metrics.counter("serve.rounds").inc()
+                self._metrics.histogram("serve.round_s").observe(
+                    time.perf_counter() - t_round)
+            if self._injector is not None:
+                # Injected slow round: burn extra virtual time so deadline
+                # enforcement can be exercised deterministically.
+                self._now += self._injector.round_delay(self._round)
         self._round += 1
         self._now = max(self._now + 1.0, float(self._round))
 
@@ -460,8 +538,19 @@ class ServeEngine:
         req.t_done = time.perf_counter()
         if status == TIMED_OUT:
             self.stats.requests_timed_out += 1
+            self._metrics.counter("serve.requests_timed_out").inc()
+            kind = "req.timed_out"
         else:
             self.stats.requests_failed += 1
+            self._metrics.counter("serve.requests_failed").inc()
+            kind = "req.failed"
+        self.tracer.event(kind, cat="req", rid=req.rid, family=req.family,
+                          code=code, round=self._round)
+        if self._flight is not None:
+            # Terminal failure => post-mortem dump of the trailing rounds.
+            self._flight.dump(self.tracer, kind.split(".", 1)[1],
+                              rid=req.rid, family=req.family, code=code,
+                              detail=detail, round=self._round)
         if req.family == "lm":
             self.scheduler.evict(req)
 
@@ -546,9 +635,10 @@ class ServeEngine:
                     return res, tier
             except Exception as exc:
                 if qkey is not None:
+                    # Stats/metrics/trace/flight accounting fires through
+                    # the quarantine's on_event callback.
                     self.quarantine.record_failure(qkey, self._round, exc)
-                    self.stats.n_quarantine_events += 1
-                self.stats.n_contained_errors += 1
+                self._contained()
         res = self._interp_executor(fam).run(graph, pol, es, params=params)
         return res, "interpreted"
 
@@ -590,8 +680,11 @@ class ServeEngine:
                     continue
             if not req.out:
                 req.t_first = now
+                self.tracer.event("req.ttft", cat="req", rid=req.rid,
+                                  round=self._round)
             req.out.append(int(tok))
             st.tokens_out += 1
+            self._metrics.counter("serve.tokens_out").inc()
             if req.done:
                 self._finish(req, now, st)
 
@@ -601,14 +694,16 @@ class ServeEngine:
         wl = self.family("lm")
         pool = self._lm_pool()
         feed_mode = self.compiled and self.bucketed
-        if feed_mode:
-            self._start_feed(plan, wl, pool)
-            graph, entries = build_lm_feed_round_graph(plan)
-        else:
-            graph = build_lm_round_graph(
-                plan, prefill_bucket_min=self.scheduler.prefill_bucket_min)
-            entries = [e for e in plan.prefills + plan.decodes
-                       if e.req is not None]
+        with self.tracer.span("round.pack"):
+            if feed_mode:
+                self._start_feed(plan, wl, pool)
+                graph, entries = build_lm_feed_round_graph(plan)
+            else:
+                graph = build_lm_round_graph(
+                    plan,
+                    prefill_bucket_min=self.scheduler.prefill_bucket_min)
+                entries = [e for e in plan.prefills + plan.decodes
+                           if e.req is not None]
         if graph is None:
             return
         try:
@@ -617,19 +712,22 @@ class ServeEngine:
         except Exception:
             # Even the interpreted floor failed on the merged graph:
             # isolate per entry so one bad request cannot starve the rest.
-            self.stats.n_contained_errors += 1
+            self._contained()
             return self._isolate_lm_round(plan, wl, feed_mode)
         self._note_tier(tier)
-        ys = np.asarray(res.field("y", [e.o_node for e in entries]))
-        toks = np.argmax(ys, axis=-1)
-        # Scatter live-request cell states back into the slot pool. Dummy
-        # pads are excluded, so their slot-0 reads are never written back.
-        cell_ids = [e.cell_node for e in entries]
-        slots = np.asarray([e.slot for e in entries], np.int32)
-        for f in wl.state_fields:
-            vals = res.field(f, cell_ids)
-            pool[f] = pool[f].at[slots].set(vals)
-        self._feed_tokens(entries, toks, time.perf_counter(), self.stats)
+        with self.tracer.span("round.scatter"):
+            ys = np.asarray(res.field("y", [e.o_node for e in entries]))
+            toks = np.argmax(ys, axis=-1)
+            # Scatter live-request cell states back into the slot pool.
+            # Dummy pads are excluded, so their slot-0 reads are never
+            # written back.
+            cell_ids = [e.cell_node for e in entries]
+            slots = np.asarray([e.slot for e in entries], np.int32)
+            for f in wl.state_fields:
+                vals = res.field(f, cell_ids)
+                pool[f] = pool[f].at[slots].set(vals)
+        with self.tracer.span("round.feed"):
+            self._feed_tokens(entries, toks, time.perf_counter(), self.stats)
 
     def _isolate_lm_round(self, plan, wl, feed_mode: bool) -> None:
         """Request-level lm isolation: re-run this round one live entry at
@@ -679,18 +777,20 @@ class ServeEngine:
         therefore one bucket signature."""
         wl = self.family("lm")
         pool = self._lm_pool()
-        self._start_feed(plan, wl, pool)
-        shard_plans = [RoundPlan() for _ in range(self.n_shards)]
-        for e in plan.prefills:
-            shard_plans[e.shard].prefills.append(e)
-        for e in plan.decodes:
-            shard_plans[e.shard].decodes.append(e)
-        counts = [len(sp.prefills) + len(sp.decodes) for sp in shard_plans]
-        if not any(counts):
-            return
-        target = max(bucket_len(c, COUNT_BUCKET_MIN) for c in counts)
-        built = [build_lm_feed_round_graph(sp, count=target)
-                 for sp in shard_plans]
+        with self.tracer.span("round.pack"):
+            self._start_feed(plan, wl, pool)
+            shard_plans = [RoundPlan() for _ in range(self.n_shards)]
+            for e in plan.prefills:
+                shard_plans[e.shard].prefills.append(e)
+            for e in plan.decodes:
+                shard_plans[e.shard].decodes.append(e)
+            counts = [len(sp.prefills) + len(sp.decodes)
+                      for sp in shard_plans]
+            if not any(counts):
+                return
+            target = max(bucket_len(c, COUNT_BUCKET_MIN) for c in counts)
+            built = [build_lm_feed_round_graph(sp, count=target)
+                     for sp in shard_plans]
         ex = self._executor("lm")
         try:
             if self._injector is not None:
@@ -703,36 +803,38 @@ class ServeEngine:
         except Exception:
             # First rung of the ladder: retry shard by shard through the
             # inherited single-device bucketed path.
-            self.stats.n_contained_errors += 1
+            self._contained()
             return self._lm_round_sharded_degrade(ex, built, wl, pool)
         now = time.perf_counter()
-        # One combined scatter per state field across all shards (not K
-        # copy-on-write pool updates): collect every live entry's (shard,
-        # slot, state) first, write once. State values stay on device —
-        # only the logits cross to host (the argmax token feedback, same
-        # as the single-device path).
-        shards_ix: list[int] = []
-        slots_ix: list[int] = []
-        state_vals: dict[str, list] = {f: [] for f in wl.state_fields}
-        fed: list[tuple[list, np.ndarray, ServeStats]] = []
-        for s, (res, (_, entries)) in enumerate(zip(results, built)):
-            if not entries:
-                continue
-            ys = np.asarray(res.field("y", [e.o_node for e in entries]))
-            cell_ids = [e.cell_node for e in entries]
-            shards_ix.extend([s] * len(entries))
-            slots_ix.extend(e.slot for e in entries)
+        with self.tracer.span("round.scatter"):
+            # One combined scatter per state field across all shards (not K
+            # copy-on-write pool updates): collect every live entry's
+            # (shard, slot, state) first, write once. State values stay on
+            # device — only the logits cross to host (the argmax token
+            # feedback, same as the single-device path).
+            shards_ix: list[int] = []
+            slots_ix: list[int] = []
+            state_vals: dict[str, list] = {f: [] for f in wl.state_fields}
+            fed: list[tuple[list, np.ndarray, ServeStats]] = []
+            for s, (res, (_, entries)) in enumerate(zip(results, built)):
+                if not entries:
+                    continue
+                ys = np.asarray(res.field("y", [e.o_node for e in entries]))
+                cell_ids = [e.cell_node for e in entries]
+                shards_ix.extend([s] * len(entries))
+                slots_ix.extend(e.slot for e in entries)
+                for f in wl.state_fields:
+                    state_vals[f].append(res.field(f, cell_ids))
+                fed.append((entries, np.argmax(ys, axis=-1),
+                            self._shard_stats[s]))
+            shards_arr = np.asarray(shards_ix, np.int32)
+            slots_arr = np.asarray(slots_ix, np.int32)
             for f in wl.state_fields:
-                state_vals[f].append(res.field(f, cell_ids))
-            fed.append((entries, np.argmax(ys, axis=-1),
-                        self._shard_stats[s]))
-        shards_arr = np.asarray(shards_ix, np.int32)
-        slots_arr = np.asarray(slots_ix, np.int32)
-        for f in wl.state_fields:
-            pool[f] = pool[f].at[shards_arr, slots_arr].set(
-                jnp.concatenate(state_vals[f]))
-        for entries, toks, st in fed:
-            self._feed_tokens(entries, toks, now, st)
+                pool[f] = pool[f].at[shards_arr, slots_arr].set(
+                    jnp.concatenate(state_vals[f]))
+        with self.tracer.span("round.feed"):
+            for entries, toks, st in fed:
+                self._feed_tokens(entries, toks, now, st)
 
     def _lm_round_sharded_degrade(self, ex, built, wl, pool) -> None:
         """Per-shard bucketed retry after a failed shard_map dispatch.
@@ -751,7 +853,7 @@ class ServeEngine:
                 mine = {"slots": {f: pool[f][s] for f in pool}}
                 res = ex.run(g, pol, es, params=mine)
             except Exception as exc:
-                self.stats.n_contained_errors += 1
+                self._contained()
                 for e in entries:
                     self._fail(e.req, EXEC_ERROR,
                                f"shard {s} bucketed retry failed: {exc!r}")
@@ -774,7 +876,7 @@ class ServeEngine:
         try:
             res, tier = self._exec_graph(fam, graph)
         except Exception:
-            self.stats.n_contained_errors += 1
+            self._contained()
             return self._isolate_single_shot(fam, reqs)
         self._note_tier(tier)
         now = time.perf_counter()
@@ -827,7 +929,7 @@ class ServeEngine:
         except Exception:
             # Ladder: per-shard bucketed retry, then per-request isolation
             # on the interpreted floor for any shard that still fails.
-            self.stats.n_contained_errors += 1
+            self._contained()
             self._note_tier("bucketed")
             for s, (grp, (g, out_ids)) in enumerate(zip(groups, built)):
                 if not grp:
@@ -843,7 +945,7 @@ class ServeEngine:
                         st.outputs_out += len(ids)
                         self._finish(req, now, st)
                 except Exception:
-                    self.stats.n_contained_errors += 1
+                    self._contained()
                     self._isolate_single_shot(fam, grp, st)
             return
         now = time.perf_counter()
@@ -864,6 +966,17 @@ class ServeEngine:
         st.requests_done += 1
         st.latency_s.append(now - req.t_admit)
         st.ttft_s.append(req.t_first - req.t_admit)
+        self._metrics.counter("serve.requests_completed").inc()
+        if req.family != "lm" and req.result is not None:
+            # Mirrors the per-site st.outputs_out accounting (one row of
+            # stacked logits per requested output node).
+            self._metrics.counter("serve.outputs_out").inc(len(req.result))
+        self._metrics.histogram("serve.latency_s").observe(now - req.t_admit)
+        self._metrics.histogram("serve.ttft_s").observe(
+            req.t_first - req.t_admit)
+        self.tracer.event("req.completed", cat="req", rid=req.rid,
+                          family=req.family, round=self._round,
+                          tokens=len(req.out))
         if req.family == "lm":
             self.scheduler.release(req)
 
@@ -901,6 +1014,15 @@ class ServeEngine:
         s.sched_cache_misses = self.schedule_cache.misses - sm
         s.bucket_cache_hits = self.bucket_cache.hits - bh
         s.bucket_cache_misses = self.bucket_cache.misses - bm
+        # Fold-time absolutes mirror into gauges (idempotent set, not
+        # accumulation) so a metrics snapshot carries the same timing
+        # decomposition as ServeStats — cross-validated in tests.
+        m = self._metrics
+        m.gauge("serve.wall_s").set(s.wall_s)
+        m.gauge("serve.schedule_s").set(s.schedule_s)
+        m.gauge("serve.exec_s").set(s.exec_s)
+        m.gauge("serve.lower_s").set(s.lower_s)
+        m.gauge("serve.n_compiles").set(s.n_compiles)
 
 
 def serve_trace(reqs, **engine_kwargs) -> tuple[list[ServeRequest], ServeStats]:

@@ -116,13 +116,20 @@ class Quarantine:
     rounds; ``blocks`` answers whether a round should bypass it (and run
     interpreted instead). More than ``max_retries`` consecutive failures
     quarantine the signature permanently; any successful run clears it.
+
+    ``on_event`` (optional) is called after every booking with
+    ``(key, fails, until, error_repr)`` — the engine hangs its stats
+    counter, metrics, tracer event, and flight-recorder dump off it, so
+    quarantine accounting lives in exactly one place.
     """
 
-    def __init__(self, backoff: int = 4, max_retries: int = 2):
+    def __init__(self, backoff: int = 4, max_retries: int = 2,
+                 on_event: Any = None):
         if backoff < 1:
             raise ValueError(f"backoff must be >= 1, got {backoff}")
         self.backoff = backoff
         self.max_retries = max_retries
+        self.on_event = on_event
         self._entries: dict[Any, dict] = {}
         self.events = 0          # total failures recorded
 
@@ -143,6 +150,8 @@ class Quarantine:
         else:
             e["until"] = round_ + self.backoff * (2 ** (e["fails"] - 1))
         self.events += 1
+        if self.on_event is not None:
+            self.on_event(key, e["fails"], e["until"], repr(exc))
 
     def clear(self, key: Any) -> None:
         self._entries.pop(key, None)

@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 from typing import Any
 
 from repro.core.graph import Graph
+from repro.obs.tracer import NULL_TRACER, Tracer
 
 FAMILIES = ("lm", "tree", "lattice")
 
@@ -116,11 +117,13 @@ class AdmissionQueue:
     preserving the original fire-hose semantics.
     """
 
-    def __init__(self, max_pending: int | None = None):
+    def __init__(self, max_pending: int | None = None,
+                 tracer: Tracer | None = None):
         if max_pending is not None and max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self._heap: list[tuple[float, int, ServeRequest]] = []
         self.max_pending = max_pending
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.submitted = 0
         self.rejected = 0
 
@@ -135,9 +138,13 @@ class AdmissionQueue:
             req.mark(REJECTED, "QUEUE_FULL",
                      f"admission queue at capacity ({self.max_pending})")
             self.rejected += 1
+            self.tracer.event("req.rejected", cat="req", rid=req.rid,
+                              family=req.family, code="QUEUE_FULL")
             return False
         heapq.heappush(self._heap, (req.arrival, req.rid, req))
         self.submitted += 1
+        self.tracer.event("req.queued", cat="req", rid=req.rid,
+                          family=req.family, arrival=req.arrival)
         return True
 
     def submit_many(self, reqs) -> list[ServeRequest]:
