@@ -86,6 +86,11 @@ def _sig_digest(obj: Any) -> str:
     return hashlib.sha1(repr(obj).encode()).hexdigest()[:12]
 
 
+# Public alias: serve-layer checkpointing keys quarantine entries by the same
+# digest the tracer stamps on spans, so a serialized table stays attributable.
+sig_digest = _sig_digest
+
+
 def bucket_up(n: int, ladder: tuple[int, ...] | None = None) -> int:
     """Smallest bucket >= n: next power of two, or the first rung of a
     configured ladder (falling back to powers of two past its top). A

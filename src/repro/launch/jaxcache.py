@@ -12,7 +12,52 @@ and the benchmarks.
 
 from __future__ import annotations
 
+import os
 import warnings
+
+QUARANTINE_SUBDIR = "_quarantine"
+
+
+def audit_cache_dir(cache_dir: str) -> list[str]:
+    """Sweep a persistent cache directory for corrupt entries before JAX
+    reads them: zero-byte or unreadable files (the residue of a crash or a
+    full disk mid-write) are moved into a ``_quarantine/`` subdirectory —
+    the entry recompiles fresh instead of poisoning the serve launcher.
+    Returns the quarantined paths (empty on a healthy dir)."""
+    quarantined: list[str] = []
+    try:
+        names = os.listdir(cache_dir)
+    except OSError:
+        return quarantined   # missing dir: JAX creates it on first write
+    qdir = os.path.join(cache_dir, QUARANTINE_SUBDIR)
+    for name in names:
+        path = os.path.join(cache_dir, name)
+        if not os.path.isfile(path):
+            continue
+        bad = None
+        try:
+            if os.path.getsize(path) == 0:
+                bad = "zero-byte entry"
+            else:
+                with open(path, "rb") as f:
+                    f.read(1)
+        except OSError as e:
+            bad = f"unreadable entry ({e})"
+        if bad is None:
+            continue
+        try:
+            os.makedirs(qdir, exist_ok=True)
+            dest = os.path.join(qdir, name)
+            os.replace(path, dest)
+            quarantined.append(dest)
+            warnings.warn(
+                f"quarantined corrupt XLA cache entry {path!r} ({bad}); "
+                f"it will recompile fresh", RuntimeWarning, stacklevel=2)
+        except OSError as e:
+            warnings.warn(
+                f"could not quarantine corrupt XLA cache entry {path!r}: "
+                f"{e}", RuntimeWarning, stacklevel=2)
+    return quarantined
 
 
 def enable_compilation_cache(cache_dir: str) -> bool:
@@ -21,10 +66,19 @@ def enable_compilation_cache(cache_dir: str) -> bool:
     The min-compile-time/min-entry-size gates are zeroed so even the toy
     CI-sized programs are cached — the whole point here is surviving
     process restarts, not saving disk. Returns False (with a warning)
-    when the running jax build lacks the config knobs.
+    when the running jax build lacks the config knobs. A pre-existing dir
+    is audited first: corrupt/truncated entries are quarantined so the
+    launcher falls through to a fresh compile instead of crashing.
     """
     if not cache_dir:
         return False
+    if os.path.exists(cache_dir) and not os.path.isdir(cache_dir):
+        warnings.warn(
+            f"persistent compilation cache path {cache_dir!r} exists but is "
+            f"not a directory; continuing without the cache",
+            RuntimeWarning, stacklevel=2)
+        return False
+    audit_cache_dir(cache_dir)
     import jax
 
     try:

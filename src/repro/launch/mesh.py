@@ -36,16 +36,33 @@ def device_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.sharding.Mesh(dev, axes)
 
 
-def make_data_mesh(n_devices: int | None = None, *, axis: str = "data"):
+def make_data_mesh(n_devices: int | None = None, *, axis: str = "data",
+                   exclude: tuple[int, ...] = ()):
     """A 1-D pure data-parallel mesh over ``n_devices`` (default: all local
-    devices) — one replica of the bucketed plan program per device."""
+    devices) — one replica of the bucketed plan program per device.
+
+    ``exclude`` holds device indices (into ``jax.devices()``) treated as
+    dead: the mesh is built over the first ``n_devices`` *surviving*
+    devices. This is how the serve engine rebuilds its executor after a
+    replica loss — the K-1 mesh must not include the device that died.
+    """
     import jax
 
+    devices = jax.devices()
     if n_devices is None:
-        n_devices = len(jax.devices())
+        n_devices = len(devices) - len(set(exclude))
     if n_devices < 1:
         raise ValueError(f"n_devices must be >= 1, got {n_devices}")
-    return device_mesh((n_devices,), (axis,))
+    if not exclude:
+        return device_mesh((n_devices,), (axis,))
+    alive = [d for i, d in enumerate(devices) if i not in set(exclude)]
+    if len(alive) < n_devices:
+        raise RuntimeError(
+            f"need {n_devices} devices for a 1-D {axis!r} mesh with "
+            f"{sorted(set(exclude))} excluded, but only {len(alive)} of "
+            f"{len(devices)} local devices survive")
+    dev = np.asarray(alive[:n_devices])
+    return jax.sharding.Mesh(dev, (axis,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -161,9 +161,28 @@ def main(argv=None):
     ap.add_argument("--inject-faults", default="", metavar="SPEC",
                     help="deterministic fault injection, e.g. "
                          "'compile_fail=2,exec_rounds=3:7,slow=5*4.0,"
-                         "poison=2' — fail the first N compiles, raise at "
-                         "the listed engine rounds, burn extra virtual time "
-                         "at a round, and mix in N malformed request graphs")
+                         "poison=2,crash=8,shard_lost=5*1,shard_back=12' — "
+                         "fail the first N compiles, raise at the listed "
+                         "engine rounds, burn extra virtual time at a round, "
+                         "mix in N malformed request graphs, crash the "
+                         "process at a round boundary (checkpoint first when "
+                         "--checkpoint-dir is set), kill replica S at round "
+                         "R, and recover it at the listed rounds")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="write versioned serve-session checkpoints here "
+                         "(periodic via --checkpoint-every and on injected "
+                         "crash); restore with --restore")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="checkpoint every N scheduler rounds (0 = only on "
+                         "crash); needs --checkpoint-dir")
+    ap.add_argument("--restore", default="", metavar="CKPT",
+                    help="resume serving from this checkpoint file (or from "
+                         "the latest in a checkpoint directory) instead of "
+                         "submitting a fresh trace")
+    ap.add_argument("--steal-threshold", type=int, default=-1,
+                    help="round-boundary work stealing: migrate lm entries "
+                         "from the most- to the least-loaded replica while "
+                         "the active-count spread exceeds this. -1 disables")
     ap.add_argument("--trace", default="", help="JSON trace file")
     ap.add_argument("--registry", default="", help="policy registry dir")
     ap.add_argument("--train-policy", action="store_true",
@@ -254,16 +273,54 @@ def main(argv=None):
         else None
     obs = Obs(tracer=tracer, flight=flight)
 
-    eng = ServeEngine(workloads, compiled=args.plan != "interpreted",
-                      bucketed=args.plan == "bucketed",
-                      continuous=args.mode == "continuous",
-                      max_slots=args.max_slots, model_size=args.model_size,
-                      seed=args.seed, registry=registry,
-                      n_shards=args.devices,
-                      queue_cap=args.queue_cap or None,
-                      fault_injector=injector, obs=obs)
-    eng.submit_many(reqs)
-    stats = eng.run()
+    if args.restore:
+        # Resume mid-trace from a snapshot: the checkpoint carries the
+        # queue, partial token streams, slot pools, and virtual clock, so
+        # no fresh trace is submitted (a replayed one would dedupe anyway).
+        import os
+
+        from repro.serve.checkpoint import latest_checkpoint
+        src = args.restore
+        if os.path.isdir(src):
+            src = latest_checkpoint(src)
+            if src is None:
+                ap.error(f"--restore {args.restore}: no checkpoints found")
+        eng = ServeEngine.restore(
+            src, workloads, obs=obs, fault_injector=injector,
+            registry=registry,
+            checkpoint_dir=args.checkpoint_dir or None,
+            checkpoint_every=args.checkpoint_every or None)
+        print(f"# restored round {eng._round} from {src} "
+              f"({len(eng.requests)} ledger requests, "
+              f"{len(eng.queue)} still queued)")
+    else:
+        eng = ServeEngine(workloads, compiled=args.plan != "interpreted",
+                          bucketed=args.plan == "bucketed",
+                          continuous=args.mode == "continuous",
+                          max_slots=args.max_slots,
+                          model_size=args.model_size,
+                          seed=args.seed, registry=registry,
+                          n_shards=args.devices,
+                          queue_cap=args.queue_cap or None,
+                          fault_injector=injector, obs=obs,
+                          checkpoint_dir=args.checkpoint_dir or None,
+                          checkpoint_every=args.checkpoint_every,
+                          steal_threshold=(None if args.steal_threshold < 0
+                                           else args.steal_threshold))
+        eng.submit_many(reqs)
+    try:
+        stats = eng.run()
+    except Exception as exc:
+        from repro.serve.faults import InjectedCrash
+        if not isinstance(exc, InjectedCrash):
+            raise
+        # The injected process crash: the crash checkpoint (if configured)
+        # is already on disk — report where to resume from and exit loudly.
+        where = (f"; resume with --restore {args.checkpoint_dir}"
+                 if args.checkpoint_dir else
+                 " (no --checkpoint-dir, so nothing was saved)")
+        print(f"# {exc}{where}")
+        return 1
 
     pct = stats.latency_percentiles()
     print(f"{stats.requests_done} requests ({stats.tokens_out} tokens, "
@@ -291,6 +348,12 @@ def main(argv=None):
           f"rejected {stats.requests_rejected}; "
           f"{stats.n_contained_errors} contained errors, "
           f"{stats.n_quarantine_events} quarantine events")
+    if (stats.n_checkpoints or stats.n_restores or stats.n_resize_events
+            or stats.n_entries_stolen):
+        print(f"durability: {stats.n_checkpoints} checkpoint(s), "
+              f"{stats.n_restores} restore(s), {stats.n_resize_events} "
+              f"resize event(s) ({stats.n_entries_evacuated} entries "
+              f"evacuated), {stats.n_entries_stolen} stolen")
     if registry is not None and registry.diagnostics:
         for fam, bad in sorted(registry.diagnostics.items()):
             for d in bad:

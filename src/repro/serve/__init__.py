@@ -1,22 +1,35 @@
 """Continuous-batching serve subsystem on compiled execution plans.
 
-- ``queue``     — admission queue + request types (lm / tree / lattice)
-- ``scheduler`` — continuous folding of arrivals into in-flight waves,
-                  wave-as-graph builders
-- ``engine``    — round-driven engine: compiled plan path, slot pools,
-                  shared FIFO caches, ``ServeStats``
-- ``registry``  — persistent FSM policy registry (content fingerprints)
-- ``traces``    — synthetic request traces (shared by launcher/example/bench)
-- ``lm_wave``   — legacy wave-by-wave TransformerLM engine (baseline)
+- ``queue``      — admission queue + request types (lm / tree / lattice)
+- ``scheduler``  — continuous folding of arrivals into in-flight waves,
+                   wave-as-graph builders
+- ``engine``     — round-driven engine: compiled plan path, slot pools,
+                   shared FIFO caches, ``ServeStats``
+- ``registry``   — persistent FSM policy registry (content fingerprints)
+- ``traces``     — synthetic request traces (shared by launcher/example/bench)
+- ``faults``     — error codes, validation, quarantine, fault injection
+- ``checkpoint`` — versioned, fingerprinted session snapshots (atomic IO)
+- ``resilience`` — snapshot/restore, elastic mesh resize, work stealing
+- ``lm_wave``    — legacy wave-by-wave TransformerLM engine (baseline)
 """
 
+from .checkpoint import (CheckpointError, latest_checkpoint, list_checkpoints,
+                         read_checkpoint, write_checkpoint)
 from .engine import ServeEngine, ServeStats, serve_trace
-from .queue import AdmissionQueue, ServeRequest, graph_request, lm_request
+from .faults import FaultInjector, InjectedCrash, Quarantine
+from .queue import (AdmissionQueue, ServeRequest, graph_request, lm_request,
+                    reserve_rids)
 from .registry import PolicyRegistry
+from .resilience import (resize_mesh, restore_engine, snapshot_engine,
+                         steal_work)
 from .scheduler import ContinuousScheduler, partition_singles
 from .traces import ARRIVALS, synth_arrivals, synth_trace
 
 __all__ = ["ServeEngine", "ServeStats", "serve_trace", "AdmissionQueue",
-           "ServeRequest", "graph_request", "lm_request", "PolicyRegistry",
-           "ContinuousScheduler", "partition_singles", "ARRIVALS",
-           "synth_arrivals", "synth_trace"]
+           "ServeRequest", "graph_request", "lm_request", "reserve_rids",
+           "PolicyRegistry", "ContinuousScheduler", "partition_singles",
+           "ARRIVALS", "synth_arrivals", "synth_trace", "CheckpointError",
+           "read_checkpoint", "write_checkpoint", "list_checkpoints",
+           "latest_checkpoint", "FaultInjector", "InjectedCrash",
+           "Quarantine", "snapshot_engine", "restore_engine", "resize_mesh",
+           "steal_work"]

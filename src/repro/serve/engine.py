@@ -52,6 +52,7 @@ fault injector the whole ladder is tested under.
 
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 from typing import Any
@@ -69,7 +70,8 @@ from repro.obs import FlightRecorder, Obs, Tracer
 from repro.obs.metrics import percentile
 
 from .faults import (BAD_TOPOLOGY, DEADLINE_EXCEEDED, EXEC_ERROR,
-                     ROUND_BUDGET_EXCEEDED, Quarantine, validate_request)
+                     ROUND_BUDGET_EXCEEDED, InjectedCrash, Quarantine,
+                     validate_request)
 from .queue import (COMPLETED, FAILED, TIMED_OUT, AdmissionQueue,
                     ServeRequest)
 from .scheduler import (COUNT_BUCKET_MIN, ContinuousScheduler, RoundPlan,
@@ -110,6 +112,12 @@ class ServeStats:
     requests_rejected: int = 0    # shed by the bounded admission queue
     n_contained_errors: int = 0   # exceptions absorbed at a fault boundary
     n_quarantine_events: int = 0  # bucket-signature quarantine bookings
+    # Durability & elasticity accounting (DESIGN.md §7).
+    n_checkpoints: int = 0        # snapshots written (periodic + crash)
+    n_restores: int = 0           # engine lifetimes resumed from a snapshot
+    n_resize_events: int = 0      # mesh shrink/grow transitions
+    n_entries_evacuated: int = 0  # slot rows migrated off a dead shard
+    n_entries_stolen: int = 0     # slot rows moved by work stealing
     tier_rounds: dict[str, int] = field(default_factory=dict)
     shard_tokens: list[int] = field(default_factory=list)  # lm tokens per shard
     latency_s: list[float] = field(default_factory=list)   # admit -> done
@@ -121,7 +129,9 @@ class ServeStats:
                "bucket_cache_hits", "bucket_cache_misses",
                "n_sharded_dispatches", "n_shard_fallback_rounds",
                "requests_failed", "requests_timed_out", "requests_rejected",
-               "n_contained_errors", "n_quarantine_events")
+               "n_contained_errors", "n_quarantine_events", "n_checkpoints",
+               "n_restores", "n_resize_events", "n_entries_evacuated",
+               "n_entries_stolen")
     # Shards serve the same rounds concurrently, so wall-clock style fields
     # take the max across parts (like n_rounds), never the sum — summing
     # would inflate them K-fold and understate tok_per_s.
@@ -196,7 +206,10 @@ class ServeEngine:
                  max_rounds: int = 100_000,
                  queue_cap: int | None = None,
                  fault_injector: Any = None,
-                 obs: Obs | None = None):
+                 obs: Obs | None = None,
+                 checkpoint_every: int = 0,
+                 checkpoint_dir: str | None = None,
+                 steal_threshold: int | None = None):
         self.compiled = compiled
         self.bucketed = bucketed
         self.n_shards = int(n_shards)
@@ -274,6 +287,22 @@ class ServeEngine:
         self._pool: dict[str, jnp.ndarray] | None = None
         self._now = 0.0
         self._round = 0
+        # Durability & elasticity (DESIGN.md §7): the request ledger holds
+        # every request ever submitted (what a checkpoint snapshots and a
+        # chaos harness audits); ``_base`` carries restored absolute
+        # counters that fold-time recomputation would otherwise lose
+        # (restored executors and caches restart from zero); retired shard
+        # stats keep a dead replica's token accounting in the totals.
+        self.checkpoint_every = int(checkpoint_every)
+        self.checkpoint_dir = checkpoint_dir
+        self.steal_threshold = steal_threshold
+        self.requests: dict[int, ServeRequest] = {}
+        self.resize_log: list[dict] = []
+        self._n_shards0 = self.n_shards
+        self._excluded_devices: list[int] = []
+        self._retired_shard_stats: list[ServeStats] = []
+        self._base: dict[str, float] = {}
+        self._run_t0: float | None = None
 
     # -- observability accessors ---------------------------------------------
 
@@ -348,7 +377,9 @@ class ServeEngine:
                                      schedule_cache=self.schedule_cache,
                                      namespace=ns, tracer=self.tracer)
             self._executors[name] = ex
-            self._exec_stats[name] = ExecStats()
+            # setdefault, not assignment: a mesh resize rebuilds executors
+            # but must keep the family's accumulated ExecStats.
+            self._exec_stats.setdefault(name, ExecStats())
         return ex
 
     def _interp_executor(self, name: str):
@@ -406,7 +437,8 @@ class ServeEngine:
         unsharded engine never touches jax device state."""
         if self._mesh is None:
             from repro.launch.mesh import make_data_mesh
-            self._mesh = make_data_mesh(self.n_shards)
+            self._mesh = make_data_mesh(
+                self.n_shards, exclude=tuple(self._excluded_devices))
         return self._mesh
 
     def _lm_pool(self):
@@ -436,11 +468,15 @@ class ServeEngine:
     # -- request intake ------------------------------------------------------
 
     def submit(self, req: ServeRequest) -> ServeRequest:
+        self.requests.setdefault(req.rid, req)
         self.queue.submit(req)
         return req
 
     def submit_many(self, reqs) -> list[ServeRequest]:
         """Submit all; returns the rejected ones (empty when unbounded)."""
+        reqs = list(reqs)
+        for r in reqs:
+            self.requests.setdefault(r.rid, r)
         return self.queue.submit_many(reqs)
 
     # -- the serving loop ----------------------------------------------------
@@ -448,6 +484,7 @@ class ServeEngine:
     def run(self) -> ServeStats:
         """Drive rounds until the queue is drained and all requests are done."""
         t0 = time.perf_counter()
+        self._run_t0 = t0   # lets a crash checkpoint include elapsed wall
         # Counter baselines: shared caches accumulate across engines, but
         # this engine's stats must report only its own hits/misses —
         # snapshotted here, not at construction, so activity by other
@@ -470,11 +507,31 @@ class ServeEngine:
                     self._drain_round_budget()
                     break
         self.stats.wall_s += time.perf_counter() - t0
+        self._run_t0 = None
         self._fold_exec_stats()
         return self.stats
 
     def step(self) -> None:
         """One scheduler round: admit, build wave graphs, execute, feed back."""
+        if self._injector is not None:
+            # Elastic-mesh fault hooks fire at the round boundary, before
+            # any of this round's work: a lost replica resizes the mesh (its
+            # slot-pinned entries evacuate to survivors), a recovered one
+            # grows it back, and an injected crash snapshots then abandons
+            # the process (InjectedCrash deliberately escapes containment —
+            # it models the process dying, not a request failing).
+            for kind, shard in self._injector.shard_events(self._round):
+                if kind == "lost" and self.n_shards > 1:
+                    self.lose_shard(shard)
+                elif kind == "back":
+                    self.regrow_shard()
+            if self._injector.crash_due(self._round):
+                if self.checkpoint_dir:
+                    self.checkpoint(reason="crash")
+                raise InjectedCrash(
+                    f"injected process crash at round {self._round}")
+        if self.steal_threshold is not None and self.n_shards > 1:
+            self._steal()
         tr = self.tracer
         tr.mark_round(self._round)
         t_round = time.perf_counter()
@@ -517,6 +574,62 @@ class ServeEngine:
                 self._now += self._injector.round_delay(self._round)
         self._round += 1
         self._now = max(self._now + 1.0, float(self._round))
+        if (self.checkpoint_every and self.checkpoint_dir
+                and self._round % self.checkpoint_every == 0):
+            self.checkpoint(reason="periodic")
+
+    # -- durability & elasticity (DESIGN.md §7) ------------------------------
+
+    def checkpoint(self, path: str | None = None,
+                   reason: str = "manual") -> str:
+        """Write a versioned, fingerprinted snapshot of the whole session
+        (atomic write; see serve/checkpoint.py). Returns the path."""
+        from . import resilience
+        from .checkpoint import checkpoint_path, write_checkpoint
+        if path is None:
+            if not self.checkpoint_dir:
+                raise ValueError(
+                    "no checkpoint destination: pass path= or construct the "
+                    "engine with checkpoint_dir=")
+            os.makedirs(self.checkpoint_dir, exist_ok=True)
+            path = checkpoint_path(self.checkpoint_dir, self._round)
+        with self.tracer.span("ckpt.save", round=self._round, reason=reason):
+            payload = resilience.snapshot_engine(self, reason)
+            fp = write_checkpoint(path, payload)
+        self.stats.n_checkpoints += 1
+        self._metrics.counter("serve.checkpoints_written").inc()
+        self.tracer.event("ckpt.written", cat="ckpt", path=path,
+                          reason=reason, round=self._round, fingerprint=fp)
+        return path
+
+    @classmethod
+    def restore(cls, source, families: dict[str, Any] | None = None,
+                **kwargs) -> "ServeEngine":
+        """Rebuild an engine mid-trace from a checkpoint path (or verified
+        payload dict); ``run()`` then resumes where the snapshot left off.
+        See ``resilience.restore_engine`` for the keyword overrides."""
+        from . import resilience
+        return resilience.restore_engine(source, families, **kwargs)
+
+    def lose_shard(self, shard: int) -> None:
+        """Take replica ``shard`` out of the mesh: its slot-pinned lm
+        entries evacuate into survivors and executables rebuild over K-1."""
+        from . import resilience
+        if self.n_shards <= 1:
+            raise ValueError("cannot lose the last shard")
+        resilience.resize_mesh(self, self.n_shards - 1, dead_shard=shard)
+
+    def regrow_shard(self) -> None:
+        """Grow the mesh back by one replica (capped at the configured
+        shard count); a no-op when already at full strength."""
+        from . import resilience
+        if self.n_shards >= self._n_shards0:
+            return
+        resilience.resize_mesh(self, self.n_shards + 1)
+
+    def _steal(self) -> None:
+        from . import resilience
+        resilience.steal_work(self, self.steal_threshold)
 
     # -- fault boundaries ----------------------------------------------------
 
@@ -652,22 +765,37 @@ class ServeEngine:
         lifetime runs through one or two bucketed executables."""
         if not plan.prefills:
             return
-        for e in plan.prefills:
+        # A parked entry is an evacuee from a mesh resize re-entering the
+        # slot pool: its recurrent state (and feed progress) resumes from
+        # the stashed rows instead of re-zeroing — mid-prefill or
+        # mid-decode, the token stream continues exactly where it left off.
+        fresh = [e for e in plan.prefills if not e.req.park]
+        parked = [e for e in plan.prefills if e.req.park]
+        for e in fresh:
             req = e.req
             Lb = bucket_len(len(req.prompt),
                             self.scheduler.prefill_bucket_min)
             req.feed = ([0] * (Lb - len(req.prompt)) + list(req.prompt))
             req.n_fed = 0
-        # One batched zeroing scatter per state field (not one full-pool
-        # copy-on-write update per prefill entry per field).
-        slots = np.asarray([e.slot for e in plan.prefills], np.int32)
-        if self.n_shards > 1:
-            shards = np.asarray([e.shard for e in plan.prefills], np.int32)
+        if fresh:
+            # One batched zeroing scatter per state field (not one full-pool
+            # copy-on-write update per prefill entry per field).
+            slots = np.asarray([e.slot for e in fresh], np.int32)
+            if self.n_shards > 1:
+                shards = np.asarray([e.shard for e in fresh], np.int32)
+                for f in wl.state_fields:
+                    pool[f] = pool[f].at[shards, slots].set(0.0)
+            else:
+                for f in wl.state_fields:
+                    pool[f] = pool[f].at[slots].set(0.0)
+        for e in parked:
+            state, e.req.park = e.req.park, None
             for f in wl.state_fields:
-                pool[f] = pool[f].at[shards, slots].set(0.0)
-        else:
-            for f in wl.state_fields:
-                pool[f] = pool[f].at[slots].set(0.0)
+                row = jnp.asarray(state[f])
+                if self.n_shards > 1:
+                    pool[f] = pool[f].at[e.shard, e.slot].set(row)
+                else:
+                    pool[f] = pool[f].at[e.slot].set(row)
 
     def _feed_tokens(self, entries, toks, now: float, st: ServeStats) -> None:
         for e, tok in zip(entries, toks):
@@ -727,7 +855,8 @@ class ServeEngine:
                 vals = res.field(f, cell_ids)
                 pool[f] = pool[f].at[slots].set(vals)
         with self.tracer.span("round.feed"):
-            self._feed_tokens(entries, toks, time.perf_counter(), self.stats)
+            self._feed_tokens(entries, toks, time.perf_counter(),
+                              self._shard_stats[0])
 
     def _isolate_lm_round(self, plan, wl, feed_mode: bool) -> None:
         """Request-level lm isolation: re-run this round one live entry at
@@ -765,7 +894,7 @@ class ServeEngine:
                         pool[f] = pool[f].at[slot].set(
                             res.field(f, [e.cell_node]))
                     self._feed_tokens([e], tok, time.perf_counter(),
-                                      self.stats)
+                                      self._shard_stats[0])
                 except Exception as exc:
                     self._fail(e.req, EXEC_ERROR,
                                f"isolated lm round failed: {exc!r}")
@@ -880,18 +1009,19 @@ class ServeEngine:
             return self._isolate_single_shot(fam, reqs)
         self._note_tier(tier)
         now = time.perf_counter()
+        st = self._shard_stats[0]
         for req, ids in zip(reqs, out_ids):
             req.result = np.asarray(res.field("y", ids))
             req.t_first = now
-            self.stats.outputs_out += len(ids)
-            self._finish(req, now)
+            st.outputs_out += len(ids)
+            self._finish(req, now, st)
 
     def _isolate_single_shot(self, fam: str, reqs: list[ServeRequest],
                              st: ServeStats | None = None) -> None:
         """Last-resort per-request execution on the interpreted floor: one
         failing request in a merged wave graph must not take the round's
         other requests with it."""
-        st = st if st is not None else self.stats
+        st = st if st is not None else self._shard_stats[0]
         self._executor(fam)    # seeds self._exec_stats[fam]
         iex = self._interp_executor(fam)
         pol = self.policy_for(fam)
@@ -959,7 +1089,10 @@ class ServeEngine:
 
     def _finish(self, req: ServeRequest, now: float,
                 st: ServeStats | None = None) -> None:
-        st = st if st is not None else self.stats
+        # Per-request accounting always lands in per-shard sub-stats (shard
+        # 0 on a single-device engine) so fold-time merging stays correct
+        # across mesh resizes and checkpoint restores.
+        st = st if st is not None else self._shard_stats[0]
         req.status = COMPLETED
         req.done_round = self._round
         req.t_done = now
@@ -984,36 +1117,51 @@ class ServeEngine:
 
     def _fold_exec_stats(self) -> None:
         s = self.stats
+        b = self._base   # restored absolute counters (empty unless restored)
         s.requests_rejected = self.queue.rejected
-        if self.n_shards > 1:
-            # Per-request accounting lived in per-shard sub-stats; merge
-            # them (idempotent: absolute recompute, not accumulation).
-            agg = ServeStats.merged(self._shard_stats)
-            s.tokens_out = agg.tokens_out
-            s.outputs_out = agg.outputs_out
-            s.requests_done = agg.requests_done
-            s.latency_s = agg.latency_s
-            s.ttft_s = agg.ttft_s
+        # Per-request accounting lives in per-shard sub-stats (shard 0 on a
+        # single-device engine); retired stats keep a dead replica's share
+        # in the totals after a mesh shrink. Idempotent: absolute
+        # recompute, not accumulation.
+        agg = ServeStats.merged(self._shard_stats + self._retired_shard_stats)
+        s.tokens_out = agg.tokens_out
+        s.outputs_out = agg.outputs_out
+        s.requests_done = agg.requests_done
+        s.latency_s = agg.latency_s
+        s.ttft_s = agg.ttft_s
+        if self.n_shards > 1 or self._retired_shard_stats:
             s.shard_tokens = [p.tokens_out for p in self._shard_stats]
-            s.n_sharded_dispatches = sum(
-                getattr(ex, "n_sharded_dispatches", 0)
-                for ex in self._executors.values())
-            s.n_shard_fallback_rounds = sum(
-                getattr(ex, "n_fallback_rounds", 0)
-                for ex in self._executors.values())
-        s.n_batches = sum(es.n_batches for es in self._exec_stats.values())
-        s.n_launches = sum(es.n_launches for es in self._exec_stats.values())
-        s.n_compiles = sum(es.n_compiles for es in self._exec_stats.values())
-        s.schedule_s = sum(es.schedule_time for es in self._exec_stats.values())
-        s.exec_s = sum(es.exec_time for es in self._exec_stats.values())
-        s.lower_s = sum(es.lower_time for es in self._exec_stats.values())
+        s.n_sharded_dispatches = b.get("n_sharded_dispatches", 0) + sum(
+            getattr(ex, "n_sharded_dispatches", 0)
+            for ex in self._executors.values())
+        s.n_shard_fallback_rounds = b.get("n_shard_fallback_rounds", 0) + sum(
+            getattr(ex, "n_fallback_rounds", 0)
+            for ex in self._executors.values())
+        es_all = self._exec_stats.values()
+        s.n_batches = b.get("n_batches", 0) + sum(
+            es.n_batches for es in es_all)
+        s.n_launches = b.get("n_launches", 0) + sum(
+            es.n_launches for es in es_all)
+        s.n_compiles = b.get("n_compiles", 0) + sum(
+            es.n_compiles for es in es_all)
+        s.schedule_s = b.get("schedule_s", 0.0) + sum(
+            es.schedule_time for es in es_all)
+        s.exec_s = b.get("exec_s", 0.0) + sum(es.exec_time for es in es_all)
+        s.lower_s = b.get("lower_s", 0.0) + sum(
+            es.lower_time for es in es_all)
         ph, pm, sh, sm, bh, bm = self._cache_base
-        s.plan_cache_hits = self.plan_cache.hits - ph
-        s.plan_cache_misses = self.plan_cache.misses - pm
-        s.sched_cache_hits = self.schedule_cache.hits - sh
-        s.sched_cache_misses = self.schedule_cache.misses - sm
-        s.bucket_cache_hits = self.bucket_cache.hits - bh
-        s.bucket_cache_misses = self.bucket_cache.misses - bm
+        s.plan_cache_hits = (self.plan_cache.hits - ph
+                             + b.get("plan_cache_hits", 0))
+        s.plan_cache_misses = (self.plan_cache.misses - pm
+                               + b.get("plan_cache_misses", 0))
+        s.sched_cache_hits = (self.schedule_cache.hits - sh
+                              + b.get("sched_cache_hits", 0))
+        s.sched_cache_misses = (self.schedule_cache.misses - sm
+                                + b.get("sched_cache_misses", 0))
+        s.bucket_cache_hits = (self.bucket_cache.hits - bh
+                               + b.get("bucket_cache_hits", 0))
+        s.bucket_cache_misses = (self.bucket_cache.misses - bm
+                                 + b.get("bucket_cache_misses", 0))
         # Fold-time absolutes mirror into gauges (idempotent set, not
         # accumulation) so a metrics snapshot carries the same timing
         # decomposition as ServeStats — cross-validated in tests.

@@ -48,11 +48,20 @@ EXEC_ERROR = "EXEC_ERROR"                  # execution failed even isolated
 DEADLINE_EXCEEDED = "DEADLINE_EXCEEDED"    # virtual deadline passed
 QUEUE_FULL = "QUEUE_FULL"                  # admission queue shed the request
 ROUND_BUDGET_EXCEEDED = "ROUND_BUDGET_EXCEEDED"  # engine drained at max_rounds
+SHARD_LOST = "SHARD_LOST"                  # replica died; evacuation impossible
 
 
 class InjectedFault(RuntimeError):
     """Raised by :class:`FaultInjector` hooks; indistinguishable from a real
     failure to the containment machinery (that is the point)."""
+
+
+class InjectedCrash(RuntimeError):
+    """A fault-injected *process* crash: unlike :class:`InjectedFault` this
+    deliberately escapes every containment boundary — the engine writes a
+    crash checkpoint (when a checkpoint dir is configured) and lets it
+    propagate out of ``run()``, modeling the process dying mid-trace. The
+    chaos harness catches it and restores from the checkpoint."""
 
 
 def make_error(code: str, detail: str, round_: int) -> dict:
@@ -121,6 +130,15 @@ class Quarantine:
     ``(key, fails, until, error_repr)`` — the engine hangs its stats
     counter, metrics, tracer event, and flight-recorder dump off it, so
     quarantine accounting lives in exactly one place.
+
+    Entries are keyed internally by the key's *signature digest* (the same
+    ``sig_digest`` the engine stamps into quarantine tracer events), which
+    makes the table serializable: keys are tuples of family names, bucket
+    specs, and topology fingerprints whose reprs are deterministic across
+    processes, so a digest booked before a checkpoint still blocks the
+    same signature after a restore. Backoff deadlines are *round numbers*
+    on the virtual clock, so they survive serialization unchanged
+    (DESIGN.md §7).
     """
 
     def __init__(self, backoff: int = 4, max_retries: int = 2,
@@ -130,19 +148,25 @@ class Quarantine:
         self.backoff = backoff
         self.max_retries = max_retries
         self.on_event = on_event
-        self._entries: dict[Any, dict] = {}
+        self._entries: dict[str, dict] = {}   # digest -> booking
         self.events = 0          # total failures recorded
+
+    @staticmethod
+    def _dig(key: Any) -> str:
+        from repro.core.plan import sig_digest
+        return sig_digest(key)
 
     def __len__(self) -> int:
         return len(self._entries)
 
     def blocks(self, key: Any, round_: int) -> bool:
-        e = self._entries.get(key)
+        e = self._entries.get(self._dig(key))
         return e is not None and round_ < e["until"]
 
     def record_failure(self, key: Any, round_: int, exc: BaseException) -> None:
-        e = self._entries.setdefault(key, {"fails": 0, "until": 0,
-                                           "error": ""})
+        e = self._entries.setdefault(self._dig(key),
+                                     {"fails": 0, "until": 0, "error": "",
+                                      "key": repr(key)})
         e["fails"] += 1
         e["error"] = repr(exc)
         if e["fails"] > self.max_retries:
@@ -154,12 +178,39 @@ class Quarantine:
             self.on_event(key, e["fails"], e["until"], repr(exc))
 
     def clear(self, key: Any) -> None:
-        self._entries.pop(key, None)
+        self._entries.pop(self._dig(key), None)
 
     def permanent(self) -> int:
         """How many signatures are quarantined for good."""
         return sum(1 for e in self._entries.values()
                    if e["until"] == float("inf"))
+
+    # serialization (serve/checkpoint.py) -------------------------------------
+
+    def state(self) -> dict:
+        """JSON-serializable snapshot. ``until = null`` encodes the
+        permanent (infinite) quarantine, which JSON cannot carry as a
+        float."""
+        return {"backoff": self.backoff, "max_retries": self.max_retries,
+                "events": self.events,
+                "entries": [
+                    {"digest": d, "fails": e["fails"],
+                     "until": (None if e["until"] == float("inf")
+                               else e["until"]),
+                     "error": e["error"], "key": e.get("key", "")}
+                    for d, e in sorted(self._entries.items())]}
+
+    def load_state(self, st: dict) -> None:
+        """Restore a ``state()`` snapshot (booking table + event counter;
+        the backoff/max_retries config stays this instance's own)."""
+        self.events = int(st.get("events", 0))
+        self._entries = {
+            x["digest"]: {"fails": int(x["fails"]),
+                          "until": (float("inf") if x["until"] is None
+                                    else x["until"]),
+                          "error": x.get("error", ""),
+                          "key": x.get("key", "")}
+            for x in st.get("entries", [])}
 
 
 # -- deterministic fault injection -------------------------------------------
@@ -180,19 +231,40 @@ class FaultInjector:
       enforcement can be exercised deterministically.
     - ``poison``: how many malformed requests the trace builder should mix
       in (consumed by the launcher/benchmark, not by engine hooks).
+    - ``crash_rounds``: rounds at which the engine raises
+      :class:`InjectedCrash` *before* any round work — modeling the process
+      dying at a round boundary. The engine writes a crash checkpoint
+      first (when configured), so the chaos harness can restore and prove
+      output equivalence.
+    - ``shard_lost``: ``{round: shard}`` replica failures — the engine
+      evacuates the shard's slot-pinned lm entries and resizes the mesh to
+      K-1 at that round boundary (DESIGN.md §7).
+    - ``shard_back_rounds``: rounds at which a lost replica recovers — the
+      engine re-grows the mesh one shard (capped at the original K).
     """
 
     def __init__(self, compile_fail: int = 0, exec_fail_rounds=(),
                  slow_rounds: dict[int, float] | None = None,
-                 poison: int = 0):
+                 poison: int = 0, crash_rounds=(),
+                 shard_lost: dict[int, int] | None = None,
+                 shard_back_rounds=()):
         self.compile_fail = int(compile_fail)
         self.exec_fail_rounds = frozenset(int(r) for r in exec_fail_rounds)
         self.slow_rounds = {int(k): float(v)
                             for k, v in (slow_rounds or {}).items()}
         self.poison = int(poison)
+        self.crash_rounds = frozenset(int(r) for r in crash_rounds)
+        self.shard_lost = {int(k): int(v)
+                           for k, v in (shard_lost or {}).items()}
+        self.shard_back_rounds = frozenset(int(r)
+                                           for r in shard_back_rounds)
         self.fired_compile = 0
         self.fired_exec = 0
+        self.fired_crash = 0
         self._exec_armed = set(self.exec_fail_rounds)
+        self._crash_armed = set(self.crash_rounds)
+        self._shard_armed = dict(self.shard_lost)
+        self._back_armed = set(self.shard_back_rounds)
 
     # hooks ------------------------------------------------------------------
 
@@ -217,6 +289,27 @@ class FaultInjector:
     def round_delay(self, round_: int) -> float:
         return self.slow_rounds.get(round_, 0.0)
 
+    def crash_due(self, round_: int) -> bool:
+        """One-shot crash check at a round boundary (armed per round, so a
+        restored engine resuming at the same round re-crashes only if its
+        own injector arms it again)."""
+        if round_ in self._crash_armed:
+            self._crash_armed.discard(round_)
+            self.fired_crash += 1
+            return True
+        return False
+
+    def shard_events(self, round_: int):
+        """Replica-elasticity events due at ``round_``, one-shot:
+        ``("lost", shard)`` then ``("back", None)`` entries."""
+        out = []
+        if round_ in self._shard_armed:
+            out.append(("lost", self._shard_armed.pop(round_)))
+        if round_ in self._back_armed:
+            self._back_armed.discard(round_)
+            out.append(("back", None))
+        return out
+
     # spec parsing -----------------------------------------------------------
 
     @classmethod
@@ -224,9 +317,11 @@ class FaultInjector:
         """Parse a ``--inject-faults`` spec string.
 
         Comma-separated ``key=value`` pairs; list values are colon-separated,
-        slow-round entries are ``round*delay`` pairs::
+        slow-round entries are ``round*delay`` pairs, shard-loss entries are
+        ``round*shard`` pairs::
 
             compile_fail=2,exec_rounds=3:7,slow=5*4.0:9*2.0,poison=2
+            crash=8,shard_lost=5*1,shard_back=12
         """
         kw: dict[str, Any] = {}
         for part in (spec or "").split(","):
@@ -252,10 +347,23 @@ class FaultInjector:
                 kw["slow_rounds"] = slow
             elif k == "poison":
                 kw["poison"] = int(v)
+            elif k == "crash":
+                kw["crash_rounds"] = [int(x) for x in v.split(":") if x]
+            elif k == "shard_lost":
+                lost = {}
+                for entry in v.split(":"):
+                    if not entry:
+                        continue
+                    r, s = entry.split("*")
+                    lost[int(r)] = int(s)
+                kw["shard_lost"] = lost
+            elif k == "shard_back":
+                kw["shard_back_rounds"] = [int(x) for x in v.split(":") if x]
             else:
                 raise ValueError(
                     f"unknown fault spec key {k!r} (known: compile_fail, "
-                    f"exec_rounds, slow, poison)")
+                    f"exec_rounds, slow, poison, crash, shard_lost, "
+                    f"shard_back)")
         return cls(**kw)
 
 

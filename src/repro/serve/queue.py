@@ -19,7 +19,7 @@ virtual time unit.
 from __future__ import annotations
 
 import heapq
-import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -36,7 +36,33 @@ TIMED_OUT = "TIMED_OUT"
 REJECTED = "REJECTED"
 TERMINAL = (COMPLETED, FAILED, TIMED_OUT, REJECTED)
 
-_next_rid = itertools.count()
+
+class _RidCounter:
+    """Process-wide request-id source with restore support: a restored
+    engine calls :func:`reserve_rids` with the snapshot's rid ceiling so
+    requests created after a restore can never collide with replayed ones."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._next = 0
+
+    def take(self) -> int:
+        with self._lock:
+            rid = self._next
+            self._next += 1
+            return rid
+
+    def reserve(self, above: int) -> None:
+        with self._lock:
+            self._next = max(self._next, int(above))
+
+
+_rids = _RidCounter()
+
+
+def reserve_rids(above: int) -> None:
+    """Bump the process-wide rid counter to at least ``above``."""
+    _rids.reserve(above)
 
 
 @dataclass
@@ -54,7 +80,7 @@ class ServeRequest:
     max_new: int = 0                   # lm
     graph: Graph | None = None         # tree / lattice
     deadline: float | None = None      # absolute virtual time, or no SLO
-    rid: int = field(default_factory=lambda: next(_next_rid))
+    rid: int = field(default_factory=lambda: _rids.take())
 
     # lifecycle
     status: str = PENDING
@@ -65,6 +91,8 @@ class ServeRequest:
     feed: list[int] | None = None      # lm, bucketed path: padded prompt
     n_fed: int = 0                     # ... tokens already fed through
     result: Any = None                 # tree / lattice: stacked O-node logits
+    park: Any = None                   # lm: evacuated slot state awaiting a
+    #                                    free slot ({field: host row})
     admit_round: int = -1
     done_round: int = -1
     t_admit: float = 0.0
@@ -115,6 +143,13 @@ class AdmissionQueue:
     exceed the cap is shed — the request is marked ``REJECTED`` with a
     ``QUEUE_FULL`` error and never enters the heap. Unbounded by default,
     preserving the original fire-hose semantics.
+
+    Admission is **idempotent by rid**: a request id the queue has already
+    accepted (or been seeded with after a checkpoint restore) is silently
+    dropped — counted in ``duplicates``, never double-queued, never
+    double-counted in ``submitted``. This is what makes checkpoint replay
+    safe: a driver that re-submits its whole trace after a restore cannot
+    double-admit the requests the snapshot already carries.
     """
 
     def __init__(self, max_pending: int | None = None,
@@ -122,17 +157,25 @@ class AdmissionQueue:
         if max_pending is not None and max_pending < 1:
             raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self._heap: list[tuple[float, int, ServeRequest]] = []
+        self._seen: set[int] = set()   # rids ever accepted (or restored)
         self.max_pending = max_pending
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.submitted = 0
         self.rejected = 0
+        self.duplicates = 0
 
     def __len__(self) -> int:
         return len(self._heap)
 
     def submit(self, req: ServeRequest) -> bool:
         """Enqueue ``req``; returns False (and marks it REJECTED) when a
-        bounded queue is full."""
+        bounded queue is full. A rid already accepted is a no-op returning
+        True — the original admission stands."""
+        if req.rid in self._seen:
+            self.duplicates += 1
+            self.tracer.event("req.duplicate", cat="req", rid=req.rid,
+                              family=req.family)
+            return True
         if (self.max_pending is not None
                 and len(self._heap) >= self.max_pending):
             req.mark(REJECTED, "QUEUE_FULL",
@@ -142,6 +185,7 @@ class AdmissionQueue:
                               family=req.family, code="QUEUE_FULL")
             return False
         heapq.heappush(self._heap, (req.arrival, req.rid, req))
+        self._seen.add(req.rid)
         self.submitted += 1
         self.tracer.event("req.queued", cat="req", rid=req.rid,
                           family=req.family, arrival=req.arrival)
@@ -170,3 +214,8 @@ class AdmissionQueue:
         while self._heap:
             out.append(heapq.heappop(self._heap)[2])
         return out
+
+    def pending(self) -> list[ServeRequest]:
+        """Non-destructive (arrival, rid)-ordered view of queued requests —
+        what a checkpoint snapshots."""
+        return [r for _, _, r in sorted(self._heap, key=lambda t: t[:2])]

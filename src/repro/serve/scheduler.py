@@ -188,6 +188,72 @@ class ContinuousScheduler:
                 LMEntry(None, 0) for _ in range(target - len(plan.decodes)))
         return plan
 
+    # -- elastic resize / migration helpers (serve/resilience.py) ----------
+
+    def shard_load(self) -> list[int]:
+        """Active (slot-holding) request count per shard."""
+        loads = [0] * self.n_shards
+        for shard, _ in self.slot_of.values():
+            loads[shard] += 1
+        return loads
+
+    def freest_shard(self) -> int | None:
+        """Shard with the most free slots (lowest index ties); None when
+        every pool is exhausted."""
+        best = max(range(self.n_shards),
+                   key=lambda s: (len(self._free[s]), -s))
+        return best if self._free[best] else None
+
+    def take_slot(self, shard: int) -> int | None:
+        """Pop a free slot from ``shard``'s pool (None when exhausted)."""
+        return self._free[shard].popleft() if self._free[shard] else None
+
+    def assign(self, req: ServeRequest, shard: int, slot: int) -> None:
+        """Pin ``req`` to (shard, slot) — the migration-path counterpart of
+        the prefill-time assignment in ``plan_round``. The request must not
+        currently hold a slot; it joins ``active`` if not already there."""
+        assert req.rid not in self.slot_of, req.rid
+        self.slot_of[req.rid] = (shard, slot)
+        if not any(r.rid == req.rid for r in self.active):
+            self.active.append(req)
+
+    def resize(self, new_n_shards: int,
+               mapping) -> list[tuple[ServeRequest, int, int]]:
+        """Rebuild the per-shard slot pools for a new shard count.
+
+        ``mapping(shard) -> int | None`` renumbers old shards to new ones
+        (None = the shard is gone). Entries whose shard survives keep their
+        slot number on the renumbered shard; entries on a dead shard are
+        unpinned and returned as ``(req, old_shard, old_slot)`` for the
+        caller (``resilience.resize_mesh``) to evacuate — the scheduler
+        moves pinning tables, the caller moves slot state.
+
+        ``slots_per_shard`` is intentionally held fixed across resizes so
+        slot coordinates stay valid and bucket signatures (which see pool
+        shapes) don't churn; total capacity scales with the shard count.
+        """
+        if new_n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {new_n_shards}")
+        new_free = [deque(range(self.slots_per_shard))
+                    for _ in range(new_n_shards)]
+        new_slot_of: dict[int, tuple[int, int]] = {}
+        displaced: list[tuple[ServeRequest, int, int]] = []
+        by_rid = {r.rid: r for r in self.active}
+        for rid, (shard, slot) in self.slot_of.items():
+            s2 = mapping(shard)
+            if s2 is None:
+                displaced.append((by_rid[rid], shard, slot))
+            else:
+                new_slot_of[rid] = (s2, slot)
+                new_free[s2].remove(slot)
+        self.n_shards = new_n_shards
+        self._free = new_free
+        self.slot_of = new_slot_of
+        self.max_slots = self.slots_per_shard * new_n_shards
+        gone = {r.rid for r, _, _ in displaced}
+        self.active = [r for r in self.active if r.rid not in gone]
+        return displaced
+
     def release(self, req: ServeRequest) -> None:
         """Return a finished request's slot to its home shard's pool."""
         shard, slot = self.slot_of.pop(req.rid)
