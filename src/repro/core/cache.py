@@ -51,6 +51,18 @@ class FIFOCache(dict):
             self.misses += 1
             return default
 
+    def peek(self, key, default=None):
+        """Lookup without touching hit/miss counters or (for LRU) entry age.
+
+        The async-compile engine probes executable readiness every round
+        while a background build is in flight; those probes are not cache
+        traffic and must not skew the hit-rate stats the benches gate on.
+        """
+        with self._lock:
+            if key in self:
+                return super().__getitem__(key)
+            return default
+
     def __setitem__(self, key, value) -> None:
         with self._lock:
             if key not in self:

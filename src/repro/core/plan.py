@@ -91,6 +91,34 @@ def _sig_digest(obj: Any) -> str:
 sig_digest = _sig_digest
 
 
+def _call_compile_hook(hook: Callable, key: Any, ctx: dict) -> None:
+    """Invoke a compile hook with the executable-cache key and, when the
+    hook accepts it, a job-context dict (kind, signature digest, whether the
+    build runs on a background compile worker). Single-argument hooks from
+    before the async compile service keep working unchanged."""
+    try:
+        n_pos = _hook_arity(hook)
+    except (TypeError, ValueError):
+        n_pos = 1
+    if n_pos >= 2:
+        hook(key, ctx)
+    else:
+        hook(key)
+
+
+def _hook_arity(hook: Callable) -> int:
+    import inspect
+
+    sig = inspect.signature(hook)
+    n = 0
+    for p in sig.parameters.values():
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n += 1
+        elif p.kind == p.VAR_POSITIONAL:
+            return 2
+    return n
+
+
 def bucket_up(n: int, ladder: tuple[int, ...] | None = None) -> int:
     """Smallest bucket >= n: next power of two, or the first rung of a
     configured ladder (falling back to powers of two past its top). A
@@ -511,7 +539,8 @@ class CompiledPlan:
         if entry is not None:
             return key
         if self.compile_hook is not None:
-            self.compile_hook(key)
+            _call_compile_hook(self.compile_hook, key,
+                               {"kind": "plan", "sig": _sig_digest(key)})
         with self.tracer.span("xla.compile", cat="compile", kind="plan",
                               sig=_sig_digest(key)) as sp:
             t0 = time.perf_counter()
@@ -891,11 +920,21 @@ class BucketedPlanExecutor:
         self.n_bucket_compiles = 0
         self.compile_time_s = 0.0
 
+    def _pack_key(self, graph: Graph,
+                  policy: Policy | Callable[[Graph], Schedule],
+                  ladder: tuple[int, ...] | None) -> tuple:
+        # The effective ladder is part of the key: the async serve path
+        # packs the same topology at coarser ladders to bridge onto an
+        # already-compiled bucket while the native one is still building.
+        return ("pack", self._ns, graph.topology_key(),
+                policy_cache_key(policy), ladder)
+
     def pack_for(self, graph: Graph,
                  policy: Policy | Callable[[Graph], Schedule],
-                 stats: ExecStats | None = None) -> BucketedPack:
-        key = ("pack", self._ns, graph.topology_key(),
-               policy_cache_key(policy))
+                 stats: ExecStats | None = None,
+                 ladder: tuple[int, ...] | None = None) -> BucketedPack:
+        lad = self.ladder if ladder is None else tuple(ladder)
+        key = self._pack_key(graph, policy, lad)
         pack = self._packs.get(key)
         if pack is None:
             t0 = time.perf_counter()
@@ -907,7 +946,7 @@ class BucketedPlanExecutor:
                                      layout=self.layout,
                                      max_pq_vars=self.max_pq_vars,
                                      pq_chunk=self.pq_chunk)
-                pack = pack_bucketed(low, ladder=self.ladder,
+                pack = pack_bucketed(low, ladder=lad,
                                      pad_steps=self.pad_steps,
                                      impls=self.impls)
             pack.stats.lower_time_s = time.perf_counter() - t1
@@ -917,22 +956,67 @@ class BucketedPlanExecutor:
                 stats.lower_time += pack.stats.lower_time_s
         return pack
 
+    def pack_ready(self, graph: Graph,
+                   policy: Policy | Callable[[Graph], Schedule],
+                   ladder: tuple[int, ...] | None = None
+                   ) -> BucketedPack | None:
+        """Cached pack for ``(graph, policy, ladder)`` or ``None`` — a pure
+        probe: no lowering, no hit/miss accounting. The async serve loop
+        uses this each round so host-side lowering stays off the loop."""
+        lad = self.ladder if ladder is None else tuple(ladder)
+        return self._packs.peek(self._pack_key(graph, policy, lad))
+
+    def executable_key(self, pack: BucketedPack, params: Any) -> tuple:
+        return (self._ns, pack.spec, _params_kind(params))
+
+    def executable_ready(self, pack: BucketedPack, params: Any) -> bool:
+        """True when the bucket executable is already in the shared cache —
+        a pure probe (no build, no LRU refresh, no counter bump)."""
+        return self._exes.peek(self.executable_key(pack, params)) is not None
+
     def _ensure_executable(self, pack: BucketedPack, params: Any
                            ) -> tuple[Any, tuple, float]:
         """Returns ``(key, entry, compile_s)``. The entry comes straight
         from the locked cache ``get`` (or the fresh build) — callers must
         not re-read the shared cache afterwards: a concurrent insert could
         evict the key between the check and the act."""
-        key = (self._ns, pack.spec, _params_kind(params))
+        return self.build_executable(pack, params)
+
+    def build_executable(self, pack: BucketedPack, params: Any,
+                         span_args: dict | None = None,
+                         abort_check: Callable[[], bool] | None = None
+                         ) -> tuple[Any, tuple, float]:
+        """Build (or fetch) the bucket executable for ``pack``; safe to call
+        from a background compile worker — caches are locked and the tracer
+        keeps per-thread span stacks. ``span_args`` (e.g. ``bg=True``,
+        ``queue_wait_s``) are stamped onto the ``xla.compile`` span so the
+        Fig. 8 decomposition can attribute off-loop compile time.
+        ``abort_check`` is consulted after the compile hook and before the
+        XLA build: a worker whose job was timed out and abandoned while it
+        sat in the hook bails here instead of burning a wasted compile (an
+        abort raises, so nothing is cached)."""
+        key = self.executable_key(pack, params)
         entry = self._exes.get(key)
         if entry is not None:
             return key, entry, 0.0
+        ctx = {"kind": "bucketed", "sig": _sig_digest(pack.spec)}
+        ctx.update(span_args or {})
+        if abort_check is not None:
+            # Hook-only (never stamped on spans): lets an injected hang
+            # (FaultInjector.on_compile) sleep interruptibly and release
+            # the abandoned worker thread promptly.
+            ctx["abort"] = abort_check
         if self.compile_hook is not None:
-            self.compile_hook(key)
+            _call_compile_hook(self.compile_hook, key, ctx)
+        if abort_check is not None and abort_check():
+            raise RuntimeError(
+                f"compile of bucket {_sig_digest(pack.spec)} aborted "
+                f"(job abandoned before the XLA build)")
         with self.tracer.span("xla.compile", cat="compile", kind="bucketed",
                               bucket=_sig_digest(pack.spec),
                               steps=len(pack.spec.steps),
-                              shards=pack.spec.n_shards) as sp:
+                              shards=pack.spec.n_shards,
+                              **(span_args or {})) as sp:
             t0 = time.perf_counter()
             prog = _BucketProgram(pack.spec, self.impls,
                                   gather_interpret=self.gather_interpret,
@@ -966,9 +1050,18 @@ class BucketedPlanExecutor:
     def run(self, graph: Graph, policy: Policy | Callable[[Graph], Schedule],
             stats: ExecStats | None = None, params: Any = None) -> PlanResult:
         stats = stats if stats is not None else ExecStats()
-        tr = self.tracer
-        with tr.span("plan.pack", cat="plan"):
+        with self.tracer.span("plan.pack", cat="plan"):
             pack = self.pack_for(graph, policy, stats)
+        return self.run_packed(graph, pack, stats, params=params)
+
+    def run_packed(self, graph: Graph, pack: BucketedPack,
+                   stats: ExecStats | None = None,
+                   params: Any = None) -> PlanResult:
+        """Execute ``graph`` through an explicit pack — the pack need not be
+        the graph's native one, only index/aux-compatible (the coarse-bucket
+        tier runs a small round through a wider pack of the same topology)."""
+        stats = stats if stats is not None else ExecStats()
+        tr = self.tracer
         params = params if params is not None else self.params
         with tr.span("plan.h2d", cat="plan"):
             aux = _gather_node_aux(graph, pack.aux_perm)
@@ -1077,7 +1170,8 @@ class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
         if entry is not None:
             return key, entry, 0.0
         if self.compile_hook is not None:
-            self.compile_hook(key)
+            _call_compile_hook(self.compile_hook, key,
+                               {"kind": "sharded", "sig": _sig_digest(sspec)})
         with self.tracer.span("xla.compile", cat="compile", kind="sharded",
                               bucket=_sig_digest(sspec),
                               steps=len(sspec.steps),

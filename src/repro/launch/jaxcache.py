@@ -8,14 +8,67 @@ a restarted server or a re-run benchmark pays a cache *read* instead of a
 compile. Off by default (it writes to disk and its key includes the
 jaxlib build), enabled behind ``--jax-cache DIR`` in ``launch/serve.py``
 and the benchmarks.
+
+The same directory also hosts ``warmset.json`` — the speculative
+warm-start record for the async compile service (DESIGN.md §8): the
+bucket signatures an engine has served, persisted across restarts so the
+next launch can pre-submit their compile jobs *before* the first request
+arrives. The XLA cache holds the artifact; the warmset holds the intent.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import warnings
 
 QUARANTINE_SUBDIR = "_quarantine"
+WARMSET_NAME = "warmset.json"
+
+
+def warmset_path(cache_dir: str) -> str:
+    return os.path.join(cache_dir, WARMSET_NAME)
+
+
+def load_warmset(cache_dir: str) -> dict:
+    """Read the warm-start descriptor set next to the XLA cache; a missing
+    or corrupt file yields ``{}`` (cold start) — warm-start is a speedup,
+    never a launch blocker."""
+    path = warmset_path(cache_dir)
+    try:
+        with open(path) as f:
+            ws = json.load(f)
+    except FileNotFoundError:
+        return {}
+    except (OSError, ValueError) as e:
+        warnings.warn(f"ignoring corrupt warmset {path!r}: {e}",
+                      RuntimeWarning, stacklevel=2)
+        return {}
+    if not isinstance(ws, dict):
+        warnings.warn(f"ignoring malformed warmset {path!r} "
+                      f"(expected an object)", RuntimeWarning, stacklevel=2)
+        return {}
+    return ws
+
+
+def save_warmset(cache_dir: str, warmset: dict) -> str | None:
+    """Atomically persist an engine's ``warmset()`` payload (tmp +
+    ``os.replace``, same discipline as checkpoints — a crash mid-write must
+    not leave a truncated file for ``load_warmset`` to trip on)."""
+    if not cache_dir:
+        return None
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        path = warmset_path(cache_dir)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(warmset, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+    except OSError as e:
+        warnings.warn(f"could not persist warmset in {cache_dir!r}: {e}",
+                      RuntimeWarning, stacklevel=2)
+        return None
 
 
 def audit_cache_dir(cache_dir: str) -> list[str]:

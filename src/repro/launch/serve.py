@@ -148,6 +148,24 @@ def main(argv=None):
     ap.add_argument("--jax-cache", default="",
                     help="persistent XLA compilation cache dir (residual "
                          "per-bucket compiles survive process restarts)")
+    ap.add_argument("--no-async-compile", action="store_true",
+                    help="compile bucket executables synchronously on the "
+                         "serve loop (the pre-§8 behavior). By default "
+                         "--plan bucketed lowers in background workers and "
+                         "serves misses through the degradation ladder "
+                         "until the executable lands")
+    ap.add_argument("--compile-workers", type=int, default=2,
+                    help="background compile worker threads (async "
+                         "compile only)")
+    ap.add_argument("--compile-timeout", type=float, default=30.0,
+                    help="per-compile-job wall-clock timeout in seconds; a "
+                         "job past it is abandoned and retried with "
+                         "backoff, then quarantined")
+    ap.add_argument("--warm-start", action="store_true",
+                    help="pre-submit compile jobs for the bucket "
+                         "signatures recorded in the warmset next to "
+                         "--jax-cache, and record this run's signatures "
+                         "back (async compile only; needs --jax-cache)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-request SLO in virtual ms (1 scheduler round "
@@ -209,6 +227,15 @@ def main(argv=None):
     if args.devices > 1 and args.plan != "bucketed":
         ap.error("--devices > 1 requires --plan bucketed (replicas shard "
                  "the bucketed executable)")
+    # Async compile is the bucketed-plan default; the sharded path still
+    # lowers synchronously (the engine gates on n_shards == 1 itself).
+    use_async = args.plan == "bucketed" and not args.no_async_compile
+    if args.warm_start and not use_async:
+        ap.error("--warm-start needs async compile "
+                 "(--plan bucketed without --no-async-compile)")
+    if args.warm_start and not args.jax_cache:
+        print("# --warm-start without --jax-cache: nothing persisted from "
+              "a prior run; continuing cold")
     if args.devices > 1:
         import jax
         n = len(jax.devices())
@@ -289,7 +316,10 @@ def main(argv=None):
             src, workloads, obs=obs, fault_injector=injector,
             registry=registry,
             checkpoint_dir=args.checkpoint_dir or None,
-            checkpoint_every=args.checkpoint_every or None)
+            checkpoint_every=args.checkpoint_every or None,
+            async_compile=use_async,
+            compile_workers=args.compile_workers,
+            compile_timeout_s=args.compile_timeout)
         print(f"# restored round {eng._round} from {src} "
               f"({len(eng.requests)} ledger requests, "
               f"{len(eng.queue)} still queued)")
@@ -306,8 +336,21 @@ def main(argv=None):
                           checkpoint_dir=args.checkpoint_dir or None,
                           checkpoint_every=args.checkpoint_every,
                           steal_threshold=(None if args.steal_threshold < 0
-                                           else args.steal_threshold))
+                                           else args.steal_threshold),
+                          async_compile=use_async,
+                          compile_workers=args.compile_workers,
+                          compile_timeout_s=args.compile_timeout)
         eng.submit_many(reqs)
+
+    if args.warm_start and args.jax_cache:
+        from repro.launch.jaxcache import load_warmset
+        n_warm = eng.prewarm(load_warmset(args.jax_cache))
+        if n_warm:
+            print(f"# warm-start: pre-submitted {n_warm} compile job(s) "
+                  f"from {args.jax_cache}")
+
+    import time as _time
+    t_serve0 = _time.perf_counter()
     try:
         stats = eng.run()
     except Exception as exc:
@@ -320,6 +363,7 @@ def main(argv=None):
                  if args.checkpoint_dir else
                  " (no --checkpoint-dir, so nothing was saved)")
         print(f"# {exc}{where}")
+        eng.close()   # stop compile workers for a clean interpreter exit
         return 1
 
     pct = stats.latency_percentiles()
@@ -354,6 +398,24 @@ def main(argv=None):
               f"{stats.n_restores} restore(s), {stats.n_resize_events} "
               f"resize event(s) ({stats.n_entries_evacuated} entries "
               f"evacuated), {stats.n_entries_stolen} stolen")
+    if eng.async_compile:
+        firsts = [r.t_first - t_serve0 for r in eng.requests.values()
+                  if r.t_first >= t_serve0]
+        ttft = f"{min(firsts) * 1e3:.0f} ms" if firsts else "n/a"
+        print(f"compile: {stats.compile_jobs_submitted} job(s) submitted, "
+              f"{stats.compile_jobs_landed} landed, "
+              f"{stats.n_hotswaps} hot-swap(s), "
+              f"{stats.compile_jobs_retried} retried, "
+              f"{stats.compile_jobs_timed_out} timed out, "
+              f"{stats.compile_jobs_quarantined} quarantined; "
+              f"lower {stats.lower_s:.2f}s on-loop / "
+              f"{stats.lower_bg_s:.2f}s background; "
+              f"cold-start ttft {ttft}")
+    if args.warm_start and args.jax_cache:
+        from repro.launch.jaxcache import save_warmset
+        if save_warmset(args.jax_cache, eng.warmset()):
+            print(f"# warmset saved next to {args.jax_cache}")
+    eng.close()
     if registry is not None and registry.diagnostics:
         for fam, bad in sorted(registry.diagnostics.items()):
             for d in bad:

@@ -60,7 +60,7 @@ from typing import Any
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.batching import SufficientConditionPolicy
+from repro.core.batching import SufficientConditionPolicy, policy_cache_key
 from repro.core.cache import FIFOCache, LRUCache
 from repro.core.executor import DynamicExecutor, ExecStats
 from repro.core.plan import (BucketedPlanExecutor, PlanExecutor,
@@ -118,6 +118,17 @@ class ServeStats:
     n_resize_events: int = 0      # mesh shrink/grow transitions
     n_entries_evacuated: int = 0  # slot rows migrated off a dead shard
     n_entries_stolen: int = 0     # slot rows moved by work stealing
+    # Async compile service accounting (DESIGN.md §8). ``lower_s`` keeps its
+    # meaning — lowering/compile time paid *on* the serve loop — while
+    # background builds land in ``lower_bg_s``, so the Fig. 8 decomposition
+    # attributes off-loop compile time instead of folding it into the wall.
+    lower_bg_s: float = 0.0       # background (off-loop) lowering + compile
+    n_hotswaps: int = 0           # sigs upgraded to compiled after degraded rounds
+    compile_jobs_submitted: int = 0
+    compile_jobs_landed: int = 0
+    compile_jobs_retried: int = 0
+    compile_jobs_timed_out: int = 0
+    compile_jobs_quarantined: int = 0
     tier_rounds: dict[str, int] = field(default_factory=dict)
     shard_tokens: list[int] = field(default_factory=list)  # lm tokens per shard
     latency_s: list[float] = field(default_factory=list)   # admit -> done
@@ -131,12 +142,14 @@ class ServeStats:
                "requests_failed", "requests_timed_out", "requests_rejected",
                "n_contained_errors", "n_quarantine_events", "n_checkpoints",
                "n_restores", "n_resize_events", "n_entries_evacuated",
-               "n_entries_stolen")
+               "n_entries_stolen", "n_hotswaps", "compile_jobs_submitted",
+               "compile_jobs_landed", "compile_jobs_retried",
+               "compile_jobs_timed_out", "compile_jobs_quarantined")
     # Shards serve the same rounds concurrently, so wall-clock style fields
     # take the max across parts (like n_rounds), never the sum — summing
     # would inflate them K-fold and understate tok_per_s.
     _MAXED = ("n_rounds", "n_shards", "wall_s", "schedule_s", "lower_s",
-              "exec_s")
+              "lower_bg_s", "exec_s")
 
     @classmethod
     def merged(cls, parts) -> "ServeStats":
@@ -209,7 +222,10 @@ class ServeEngine:
                  obs: Obs | None = None,
                  checkpoint_every: int = 0,
                  checkpoint_dir: str | None = None,
-                 steal_threshold: int | None = None):
+                 steal_threshold: int | None = None,
+                 async_compile: bool = False,
+                 compile_workers: int = 2,
+                 compile_timeout_s: float = 30.0):
         self.compiled = compiled
         self.bucketed = bucketed
         self.n_shards = int(n_shards)
@@ -255,6 +271,31 @@ class ServeEngine:
                                     tracer=self.tracer)
         self._injector = fault_injector
         self.quarantine = Quarantine(on_event=self._on_quarantine)
+        # Async compile service (DESIGN.md §8): bucket executables build on
+        # a supervised background worker pool; rounds whose executable has
+        # not landed degrade (coarse bucket -> interpreted floor) instead of
+        # blocking on XLA, and hot-swap at a later round boundary. Library
+        # default OFF; the serve launcher turns it on. Only the
+        # single-device bucketed path submits jobs — the sharded path keeps
+        # synchronous builds (its executables rebuild on mesh resize, and a
+        # shard_map round cannot run partially compiled).
+        self.async_compile = bool(async_compile and compiled and bucketed
+                                  and self.n_shards == 1)
+        self.compile_workers = int(compile_workers)
+        self.compile_timeout_s = float(compile_timeout_s)
+        self._compiler = None
+        if self.async_compile:
+            from .compiler import CompileService
+            self._compiler = CompileService(
+                workers=self.compile_workers,
+                timeout_s=self.compile_timeout_s,
+                quarantine=self.quarantine, metrics=self._metrics,
+                on_quarantine=self._on_compile_quarantine)
+        # Sigs that served at least one degraded round while their build
+        # was in flight — the first compiled round after landing counts as
+        # a hot-swap. ``_seen_lm_counts`` feeds the persisted warmset.
+        self._awaiting: set[str] = set()
+        self._seen_lm_counts: set[int] = set()
         self._interp_executors: dict[str, Any] = {}
         # The feed-graph path pads the *total* entry count itself, so the
         # scheduler's decode-count padding would only compound (dummy
@@ -432,6 +473,32 @@ class ServeEngine:
                               fails=fails, until=until, error=error,
                               round=self._round)
 
+    def _on_compile_quarantine(self, job) -> None:
+        """A background build exhausted its retry budget: leave a
+        flight-recorder dump carrying the job context. (The per-failure
+        quarantine bookings already fired through ``_on_quarantine``; this
+        dump marks the terminal give-up with attempt/error detail.)"""
+        self.tracer.event("compile.quarantined", cat="compile", sig=job.sig,
+                          family=job.family, attempts=job.attempts,
+                          error=job.error, round=self._round)
+        if self._flight is not None:
+            self._flight.dump(self.tracer, "compile_quarantine",
+                              sig=job.sig, family=job.family,
+                              attempts=job.attempts, error=job.error,
+                              round=self._round)
+
+    def _poll_compiles(self) -> None:
+        """Supervision heartbeat at the round boundary: collect landed
+        builds (hot-swap happens on first use, in ``_exec_graph_async``),
+        enforce job timeouts, release backoff-expired retries."""
+        if self._compiler is None:
+            return
+        for job in self._compiler.poll(self._round):
+            self.tracer.event("compile.landed", cat="compile", sig=job.sig,
+                              family=job.family, attempts=job.attempts,
+                              compile_s=round(job.compile_s, 6),
+                              round=self._round)
+
     def _data_mesh(self):
         """The shared 1-D data mesh, built lazily (first executor) so an
         unsharded engine never touches jax device state."""
@@ -506,13 +573,29 @@ class ServeEngine:
                 if self._round > self.max_rounds:
                     self._drain_round_budget()
                     break
+            if self._compiler is not None:
+                # Drain-before-exit: every in-flight build resolves (lands
+                # or quarantines) so no worker is left mid-build when the
+                # caller tears the engine down. Hung builds ride out their
+                # timeout x retry budget inside drain — it always returns.
+                with self.tracer.span("serve.drain_compiles",
+                                      cat="compile"):
+                    self._compiler.drain()
+                self._poll_compiles()
         self.stats.wall_s += time.perf_counter() - t0
         self._run_t0 = None
         self._fold_exec_stats()
         return self.stats
 
+    def close(self) -> None:
+        """Tear down background machinery (the compile worker pool).
+        Idempotent; an engine without the async service is a no-op."""
+        if self._compiler is not None:
+            self._compiler.shutdown()
+
     def step(self) -> None:
         """One scheduler round: admit, build wave graphs, execute, feed back."""
+        self._poll_compiles()
         if self._injector is not None:
             # Elastic-mesh fault hooks fire at the round boundary, before
             # any of this round's work: a lost replica resizes the mesh (its
@@ -718,9 +801,12 @@ class ServeEngine:
 
     # -- the degradation ladder ----------------------------------------------
 
-    def _exec_graph(self, fam: str, graph, params: Any = None):
+    def _exec_graph(self, fam: str, graph, params: Any = None,
+                    coarse_fn=None):
         """Run one round graph down the degradation ladder; returns
-        ``(result, tier)``.
+        ``(result, tier)``. ``coarse_fn(count)`` (lm feed rounds only)
+        rebuilds the round graph padded to a coarser count bucket — the
+        async path's bridge tier while the native build is in flight.
 
         The primary tier (bucketed / per-topology plan) is skipped while
         its quarantine key — the bucket signature on the bucketed path, the
@@ -734,6 +820,9 @@ class ServeEngine:
         pol = self.policy_for(fam)
         es = self._exec_stats[fam]
         tier = self._primary_tier()
+        if tier == "bucketed" and self._compiler is not None:
+            return self._exec_graph_async(fam, ex, pol, es, graph, params,
+                                          coarse_fn)
         if tier != "interpreted":
             qkey = None
             try:
@@ -754,6 +843,170 @@ class ServeEngine:
                 self._contained()
         res = self._interp_executor(fam).run(graph, pol, es, params=params)
         return res, "interpreted"
+
+    # -- async tier selection (DESIGN.md §8) ----------------------------------
+
+    def _exec_graph_async(self, fam: str, ex, pol, es, graph,
+                          params: Any = None, coarse_fn=None):
+        """Non-blocking counterpart of the primary-tier branch: the serve
+        loop only *probes* caches — every piece of lowering (schedule,
+        pack, XLA build) runs on the compile service's workers. Ready
+        native bucket -> ``bucketed``; not ready -> submit the build and
+        bridge through a coarser already-compiled bucket (``coarse``), else
+        the interpreted floor. The first compiled round after degraded ones
+        is the hot-swap."""
+        jobsig = _sig_digest(("cjob", fam, graph.topology_key(),
+                              policy_cache_key(pol)))
+        pack = ex.pack_ready(graph, pol)
+        blocked = (pack is not None
+                   and self.quarantine.blocks((fam, pack.spec), self._round))
+        if pack is not None and not blocked:
+            qkey = (fam, pack.spec)
+            if ex.executable_ready(pack, params):
+                try:
+                    if self._injector is not None:
+                        self._injector.on_exec(self._round, "bucketed")
+                    res = ex.run_packed(graph, pack, es, params=params)
+                    self.quarantine.clear(qkey)
+                    if jobsig in self._awaiting:
+                        self._awaiting.discard(jobsig)
+                        self.stats.n_hotswaps += 1
+                        self._metrics.counter("compile.hotswaps").inc()
+                        self.tracer.event("compile.hotswap", cat="compile",
+                                          sig=jobsig, family=fam,
+                                          round=self._round)
+                    return res, "bucketed"
+                except Exception as exc:
+                    self.quarantine.record_failure(qkey, self._round, exc)
+                    self._contained()
+                    res = self._interp_executor(fam).run(graph, pol, es,
+                                                         params=params)
+                    return res, "interpreted"
+        if not blocked:
+            # This round serves degraded while the build is in flight:
+            # remember the sig so its first compiled round counts as a
+            # hot-swap (submission itself dedupes inside the service).
+            self._submit_compile_job(fam, ex, pol, graph, jobsig, params)
+            self._awaiting.add(jobsig)
+            cres = self._try_coarse(fam, ex, pol, es, graph, params,
+                                    coarse_fn)
+            if cres is not None:
+                return cres, "coarse"
+        res = self._interp_executor(fam).run(graph, pol, es, params=params)
+        return res, "interpreted"
+
+    def _try_coarse(self, fam: str, ex, pol, es, graph, params, coarse_fn):
+        """Bridge tier: re-pad this round into a *coarser count bucket*
+        whose executable already exists. ``coarse_fn(count)`` rebuilds the
+        round graph padded to ``count`` entries (real entries keep their
+        node ids, dummies append — the same padding the scheduler already
+        does up to the count-bucket minimum), so a count-8 round can ride
+        a count-16 or count-32 executable compiled earlier (by a bigger
+        round, a warm-start, or a restore). Pure cache probes on the loop:
+        graph construction is host-side microseconds, and a pack that was
+        never built (that count bucket never ran) is simply a miss — no
+        lowering happens here."""
+        if coarse_fn is None:
+            return None
+        count = len(graph) // 4
+        for mult in (2, 4):
+            cg = coarse_fn(count * mult)
+            if cg is None:
+                continue
+            cpack = ex.pack_ready(cg, pol)
+            if cpack is None or not ex.executable_ready(cpack, params):
+                continue
+            ckey = (fam, cpack.spec)
+            if self.quarantine.blocks(ckey, self._round):
+                continue
+            try:
+                if self._injector is not None:
+                    self._injector.on_exec(self._round, "coarse")
+                res = ex.run_packed(cg, cpack, es, params=params)
+                self.quarantine.clear(ckey)
+                return res
+            except Exception as exc:
+                self.quarantine.record_failure(ckey, self._round, exc)
+                self._contained()
+                return None
+        return None
+
+    def _submit_compile_job(self, fam: str, ex, pol, graph, jobsig: str,
+                            params: Any, kind: str = "bucketed") -> bool:
+        """Queue the background build for ``graph``'s native bucket. The
+        job closure owns *all* lowering: schedule + pack (host-side), the
+        coarse bridge packs, then the XLA build; it returns the total
+        background seconds for ``lower_bg_s``."""
+        if self._compiler is None or self._compiler.in_flight(jobsig):
+            return False
+        describe = {}
+        if fam == "lm" and len(graph) % 4 == 0:
+            # Feed-round topology is determined by the padded entry count
+            # alone (an R,E,C,O fragment per entry) — that one number is a
+            # re-submittable descriptor for checkpoints and warmsets.
+            describe = {"family": "lm", "count": len(graph) // 4}
+
+        def build(job, span_args, abort):
+            scratch = ExecStats()
+            pack = ex.pack_for(graph, pol, scratch)
+            # From here on failures quarantine the same key the dispatch
+            # path checks.
+            job.qkey = (fam, pack.spec)
+            _, _, dt = ex.build_executable(pack, params,
+                                           span_args=span_args,
+                                           abort_check=abort)
+            return scratch.lower_time + dt
+
+        return self._compiler.submit(jobsig, build, family=fam, kind=kind,
+                                     describe=describe)
+
+    # -- speculative warm-start (DESIGN.md §8) --------------------------------
+
+    def warmset(self) -> dict:
+        """Bucket signatures seen by this engine as a re-submittable
+        warm-start descriptor set (persisted next to the XLA cache by the
+        launcher; see ``launch/jaxcache.py``). Only lm feed rounds are
+        recorded: their topology is the padded entry count alone, so one
+        integer rebuilds the graph and the compile job. Single-shot
+        topologies are request-shaped and not reconstructible from a
+        summary — they warm through the persistent XLA cache instead."""
+        return {"version": 1,
+                "families": {"lm": {"counts": sorted(self._seen_lm_counts)}}}
+
+    def prewarm(self, warmset: dict | None) -> int:
+        """Pre-submit compile jobs for previously seen bucket signatures
+        (a ``warmset()`` payload or a checkpoint's in-flight descriptors).
+        Returns the number of jobs submitted; no-op without the async
+        service."""
+        if self._compiler is None or not warmset:
+            return 0
+        counts = (warmset.get("families", {})
+                  .get("lm", {}).get("counts", []))
+        n = 0
+        for c in counts:
+            n += self._prewarm_lm(int(c))
+        return n
+
+    def _prewarm_lm(self, count: int) -> int:
+        if count < 1:
+            return 0
+        # An all-dummy feed graph of ``count`` fragments has the same
+        # topology — hence bucket signature — as any real round of that
+        # padded entry count.
+        g, _ = build_lm_feed_round_graph(RoundPlan(), count=count)
+        if g is None:
+            return 0
+        ex = self._executor("lm")
+        pol = self.policy_for("lm")
+        params = {"slots": self._lm_pool()}
+        self._seen_lm_counts.add(count)
+        pack = ex.pack_ready(g, pol)
+        if pack is not None and ex.executable_ready(pack, params):
+            return 0
+        jobsig = _sig_digest(("cjob", "lm", g.topology_key(),
+                              policy_cache_key(pol)))
+        return int(self._submit_compile_job("lm", ex, pol, g, jobsig,
+                                            params, kind="warm"))
 
     # -- per-family round execution -----------------------------------------
 
@@ -826,6 +1079,10 @@ class ServeEngine:
             if feed_mode:
                 self._start_feed(plan, wl, pool)
                 graph, entries = build_lm_feed_round_graph(plan)
+                if graph is not None:
+                    # Padded entry count (4 nodes per R,E,C,O fragment):
+                    # the warmset descriptor for this round's signature.
+                    self._seen_lm_counts.add(len(graph) // 4)
             else:
                 graph = build_lm_round_graph(
                     plan,
@@ -834,9 +1091,17 @@ class ServeEngine:
                            if e.req is not None]
         if graph is None:
             return
+        coarse_fn = None
+        if feed_mode and self._compiler is not None:
+            # Bridge-tier rebuild: the same plan padded to a coarser count
+            # bucket (real entries keep their node ids, dummies append), so
+            # the scatter below reads the same o/cell nodes either way.
+            def coarse_fn(count):
+                return build_lm_feed_round_graph(plan, count=count)[0]
         try:
             res, tier = self._exec_graph("lm", graph,
-                                         params={"slots": pool})
+                                         params={"slots": pool},
+                                         coarse_fn=coarse_fn)
         except Exception:
             # Even the interpreted floor failed on the merged graph:
             # isolate per entry so one bad request cannot starve the rest.
@@ -1149,6 +1414,23 @@ class ServeEngine:
         s.exec_s = b.get("exec_s", 0.0) + sum(es.exec_time for es in es_all)
         s.lower_s = b.get("lower_s", 0.0) + sum(
             es.lower_time for es in es_all)
+        # Background lowering lives in its own bucket: async builds never
+        # touch ExecStats.lower_time (rounds only execute ready
+        # executables), so lower_s stays "time the serve loop paid".
+        cst = self._compiler.stats if self._compiler is not None else {}
+        s.lower_bg_s = b.get("lower_bg_s", 0.0) + (
+            self._compiler.total_compile_s
+            if self._compiler is not None else 0.0)
+        s.compile_jobs_submitted = (b.get("compile_jobs_submitted", 0)
+                                    + cst.get("submitted", 0))
+        s.compile_jobs_landed = (b.get("compile_jobs_landed", 0)
+                                 + cst.get("landed", 0))
+        s.compile_jobs_retried = (b.get("compile_jobs_retried", 0)
+                                  + cst.get("retries", 0))
+        s.compile_jobs_timed_out = (b.get("compile_jobs_timed_out", 0)
+                                    + cst.get("timeouts", 0))
+        s.compile_jobs_quarantined = (b.get("compile_jobs_quarantined", 0)
+                                      + cst.get("quarantined", 0))
         ph, pm, sh, sm, bh, bm = self._cache_base
         s.plan_cache_hits = (self.plan_cache.hits - ph
                              + b.get("plan_cache_hits", 0))
@@ -1170,6 +1452,7 @@ class ServeEngine:
         m.gauge("serve.schedule_s").set(s.schedule_s)
         m.gauge("serve.exec_s").set(s.exec_s)
         m.gauge("serve.lower_s").set(s.lower_s)
+        m.gauge("serve.lower_bg_s").set(s.lower_bg_s)
         m.gauge("serve.n_compiles").set(s.n_compiles)
 
 

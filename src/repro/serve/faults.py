@@ -33,6 +33,7 @@ those into *request-level* or *round-level* events (DESIGN.md §5):
 from __future__ import annotations
 
 import os
+import time
 from typing import Any
 
 import numpy as np
@@ -222,6 +223,14 @@ class FaultInjector:
     - ``compile_fail``: fail the first N executable compiles (any bucket
       signature / params kind), modeling a flaky or resource-starved
       compiler. Retries past N succeed, so quarantine backoff can recover.
+    - ``compile_hang``: ``(N, seconds)`` — the first N compile attempts
+      sleep for ``seconds`` of wall time before proceeding, modeling a hung
+      XLA build. On the synchronous path this stalls the serve loop (the
+      failure mode the async compile service exists to remove); on the
+      async path the sleep lands on a background worker and the service's
+      per-job timeout abandons it.
+    - ``compile_slow``: like ``compile_hang`` but intended to stay *under*
+      the service timeout — a slow-but-successful build.
     - ``exec_fail_rounds``: engine rounds whose first non-interpreted
       dispatch raises (once per listed round). The interpreted floor is
       never injected, so the degradation ladder always has a way out —
@@ -247,8 +256,16 @@ class FaultInjector:
                  slow_rounds: dict[int, float] | None = None,
                  poison: int = 0, crash_rounds=(),
                  shard_lost: dict[int, int] | None = None,
-                 shard_back_rounds=()):
+                 shard_back_rounds=(),
+                 compile_hang: tuple[int, float] | None = None,
+                 compile_slow: tuple[int, float] | None = None):
         self.compile_fail = int(compile_fail)
+        self.compile_hang = ((int(compile_hang[0]), float(compile_hang[1]))
+                             if compile_hang else (0, 0.0))
+        self.compile_slow = ((int(compile_slow[0]), float(compile_slow[1]))
+                             if compile_slow else (0, 0.0))
+        self.fired_hang = 0
+        self.fired_slow = 0
         self.exec_fail_rounds = frozenset(int(r) for r in exec_fail_rounds)
         self.slow_rounds = {int(k): float(v)
                             for k, v in (slow_rounds or {}).items()}
@@ -268,13 +285,37 @@ class FaultInjector:
 
     # hooks ------------------------------------------------------------------
 
-    def on_compile(self, key: Any) -> None:
+    def on_compile(self, key: Any, ctx: dict | None = None) -> None:
         """Called by the plan executors on an executable-cache miss, before
-        the XLA compile runs."""
+        the XLA compile runs. ``ctx`` (when the executor passes it) carries
+        job context — kind, signature digest, ``bg=True`` when the build
+        runs on a background compile worker, and ``abort`` (a callable)
+        when the attempt can be abandoned: injected sleeps poll it so a
+        timed-out worker thread exits promptly instead of riding out the
+        full hang as a leaked daemon."""
+        abort = (ctx or {}).get("abort")
+        n_hang, hang_s = self.compile_hang
+        if self.fired_hang < n_hang:
+            self.fired_hang += 1
+            self._sleep(hang_s, abort)
+        else:
+            n_slow, slow_s = self.compile_slow
+            if self.fired_slow < n_slow:
+                self.fired_slow += 1
+                self._sleep(slow_s, abort)
         if self.fired_compile < self.compile_fail:
             self.fired_compile += 1
             raise InjectedFault(
                 f"injected compile failure #{self.fired_compile}")
+
+    @staticmethod
+    def _sleep(seconds: float, abort=None) -> None:
+        if abort is None:
+            time.sleep(seconds)
+            return
+        deadline = time.monotonic() + seconds
+        while time.monotonic() < deadline and not abort():
+            time.sleep(min(0.02, seconds))
 
     def on_exec(self, round_: int, tier: str) -> None:
         """Called by the engine before a round dispatch at ``tier``."""
@@ -322,6 +363,10 @@ class FaultInjector:
 
             compile_fail=2,exec_rounds=3:7,slow=5*4.0:9*2.0,poison=2
             crash=8,shard_lost=5*1,shard_back=12
+            compile_hang=1*10.0,compile_slow=2*0.5
+
+        ``compile_hang``/``compile_slow`` take a single ``N*seconds`` pair:
+        the first N compile attempts sleep for that many wall seconds.
         """
         kw: dict[str, Any] = {}
         for part in (spec or "").split(","):
@@ -335,6 +380,12 @@ class FaultInjector:
             k = k.strip()
             if k == "compile_fail":
                 kw["compile_fail"] = int(v)
+            elif k in ("compile_hang", "compile_slow"):
+                if "*" in v:
+                    n, s = v.split("*")
+                else:
+                    n, s = "1", v
+                kw[k] = (int(n), float(s))
             elif k == "exec_rounds":
                 kw["exec_fail_rounds"] = [int(x) for x in v.split(":") if x]
             elif k == "slow":
@@ -362,8 +413,8 @@ class FaultInjector:
             else:
                 raise ValueError(
                     f"unknown fault spec key {k!r} (known: compile_fail, "
-                    f"exec_rounds, slow, poison, crash, shard_lost, "
-                    f"shard_back)")
+                    f"compile_hang, compile_slow, exec_rounds, slow, "
+                    f"poison, crash, shard_lost, shard_back)")
         return cls(**kw)
 
 

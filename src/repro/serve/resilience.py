@@ -50,10 +50,13 @@ from .queue import reserve_rids
 # counters after a resize rebuild) — so restored values become additive
 # baselines in ``engine._base``.
 _BASE_FIELDS = ("n_batches", "n_launches", "n_compiles", "schedule_s",
-                "exec_s", "lower_s", "plan_cache_hits", "plan_cache_misses",
-                "sched_cache_hits", "sched_cache_misses", "bucket_cache_hits",
-                "bucket_cache_misses", "n_sharded_dispatches",
-                "n_shard_fallback_rounds")
+                "exec_s", "lower_s", "lower_bg_s", "plan_cache_hits",
+                "plan_cache_misses", "sched_cache_hits", "sched_cache_misses",
+                "bucket_cache_hits", "bucket_cache_misses",
+                "n_sharded_dispatches", "n_shard_fallback_rounds",
+                "compile_jobs_submitted", "compile_jobs_landed",
+                "compile_jobs_retried", "compile_jobs_timed_out",
+                "compile_jobs_quarantined")
 
 
 def _encode_stats(st: ServeStats) -> dict:
@@ -105,6 +108,9 @@ def snapshot_engine(eng: ServeEngine, reason: str = "periodic") -> dict:
             "checkpoint_dir": eng.checkpoint_dir,
             "steal_threshold": eng.steal_threshold,
             "excluded_devices": list(eng._excluded_devices),
+            "async_compile": eng.async_compile,
+            "compile_workers": eng.compile_workers,
+            "compile_timeout_s": eng.compile_timeout_s,
         },
         "clock": {"round": eng._round, "now": eng._now},
         "requests": [encode_request(eng.requests[rid])
@@ -130,6 +136,16 @@ def snapshot_engine(eng: ServeEngine, reason: str = "periodic") -> dict:
         "quarantine": eng.quarantine.state(),
         "rid_ceiling": (max(eng.requests) + 1) if eng.requests else 0,
         "resize_log": list(eng.resize_log),
+        # Compile-service continuity (DESIGN.md §8): descriptors of builds
+        # still in flight (re-submitted by restore so an interrupted compile
+        # resumes) plus the seen-signature warmset. Executables themselves
+        # are not snapshotted — the persistent XLA cache covers the artifact,
+        # this covers the *intent*.
+        "compile": {
+            "in_flight": (eng._compiler.pending_descriptors()
+                          if eng._compiler is not None else []),
+            "warm_counts": sorted(eng._seen_lm_counts),
+        },
     }
 
 
@@ -141,7 +157,10 @@ def restore_engine(source, families: dict[str, Any] | None = None, *,
                    policies=None, registry=None,
                    checkpoint_dir: str | None = None,
                    checkpoint_every: int | None = None,
-                   steal_threshold: int | None = None) -> ServeEngine:
+                   steal_threshold: int | None = None,
+                   async_compile: bool | None = None,
+                   compile_workers: int | None = None,
+                   compile_timeout_s: float | None = None) -> ServeEngine:
     """Rebuild a :class:`ServeEngine` from a checkpoint.
 
     ``source`` is a checkpoint path (read + version-gated + fingerprint-
@@ -192,7 +211,15 @@ def restore_engine(source, families: dict[str, Any] | None = None, *,
         checkpoint_every=(checkpoint_every if checkpoint_every is not None
                           else cfg["checkpoint_every"]),
         steal_threshold=(steal_threshold if steal_threshold is not None
-                         else cfg["steal_threshold"]))
+                         else cfg["steal_threshold"]),
+        # ``.get`` throughout: pre-§8 checkpoints carry no compile config
+        # (same CKPT_VERSION — the section is additive).
+        async_compile=(async_compile if async_compile is not None
+                       else cfg.get("async_compile", False)),
+        compile_workers=(compile_workers if compile_workers is not None
+                         else cfg.get("compile_workers", 2)),
+        compile_timeout_s=(compile_timeout_s if compile_timeout_s is not None
+                           else cfg.get("compile_timeout_s", 30.0)))
     with eng.tracer.span("ckpt.restore", round=payload["clock"]["round"],
                          reason=payload.get("reason", "")):
         eng._n_shards0 = int(cfg["n_shards0"])
@@ -239,6 +266,19 @@ def restore_engine(source, families: dict[str, Any] | None = None, *,
         eng._round = int(payload["clock"]["round"])
         eng._now = float(payload["clock"]["now"])
         eng.resize_log = list(payload["resize_log"])
+
+        # Resume compile-service intent: the warmset reseeds the
+        # seen-signature record, and builds that were in flight at snapshot
+        # time are re-submitted (as warm jobs — the hot-swap ledger restarts
+        # with the new service) so the interrupted compile work resumes
+        # before the first post-restore round.
+        cdoc = payload.get("compile", {})
+        eng._seen_lm_counts.update(int(c)
+                                   for c in cdoc.get("warm_counts", []))
+        resub = sorted({int(d["count"]) for d in cdoc.get("in_flight", [])
+                        if d.get("family") == "lm" and "count" in d})
+        if resub:
+            eng.prewarm({"families": {"lm": {"counts": resub}}})
 
         # Wall-clock stamps are process-local; rebase live requests' admit
         # and first-token times to "now" so post-restore latency samples

@@ -1,0 +1,336 @@
+"""Supervised async compile service (serve/compiler.py, DESIGN.md §8):
+bit-identical hot-swapped output, hang containment within the job timeout,
+failure quarantine with a flight dump, warmset persistence, checkpoint
+continuity for in-flight builds, and pool drain/shutdown. Hangs and
+failures are injected deterministically (FaultInjector), so so are the
+assertions."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.jaxcache import load_warmset, save_warmset, warmset_path
+from repro.models.workloads import make_workload
+from repro.serve import ServeEngine, lm_request
+from repro.serve.compiler import CompileService
+from repro.serve.faults import FaultInjector, Quarantine
+from repro.serve.queue import COMPLETED
+from repro.serve.resilience import snapshot_engine
+from repro.serve.scheduler import RoundPlan, build_lm_feed_round_graph
+
+MODEL_SIZE = 8
+
+
+@pytest.fixture(scope="module")
+def workloads():
+    return {"lm": make_workload("ChainLM", MODEL_SIZE)}
+
+
+def _lm_trace(n=4, max_new=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return [lm_request(list(map(int, rng.integers(0, 256, 4 + i % 3))),
+                       max_new, arrival=float(i)) for i in range(n)]
+
+
+def _engine(workloads, **kw):
+    kw.setdefault("compiled", True)
+    kw.setdefault("bucketed", True)
+    kw.setdefault("continuous", True)
+    kw.setdefault("max_slots", 4)
+    return ServeEngine(workloads, **kw)
+
+
+def _tokens(reqs):
+    return [tuple(r.out) for r in reqs]
+
+
+# -- CompileService unit behavior (no jax: fake builds) ------------------------
+
+
+def test_service_dedupes_and_lands():
+    svc = CompileService(workers=1, timeout_s=5.0)
+    ev = threading.Event()
+
+    def build(job, span_args, abort):
+        ev.wait(1.0)
+        return 0.01
+
+    assert svc.submit("sig-a", build)
+    assert not svc.submit("sig-a", build), "in-flight sig must dedupe"
+    assert svc.in_flight("sig-a")
+    ev.set()
+    assert svc.drain(timeout_s=5.0)
+    landed = svc.poll()
+    assert [j.sig for j in landed] == ["sig-a"]
+    assert svc.stats["landed"] == 1 and svc.stats["submitted"] == 1
+    assert svc.pending_count() == 0
+    # A landed sig may be resubmitted (readiness probing is the engine's
+    # job, not the service's).
+    assert svc.submit("sig-a", lambda j, s, a: 0.0)
+    svc.drain(timeout_s=5.0)
+    svc.shutdown()
+
+
+def test_service_retries_then_quarantines():
+    q = Quarantine(backoff=2, max_retries=2)
+    quarantined = []
+    svc = CompileService(workers=1, timeout_s=5.0, max_retries=2,
+                         retry_backoff_s=0.01, quarantine=q,
+                         on_quarantine=quarantined.append)
+
+    def build(job, span_args, abort):
+        job.qkey = ("lm", ("spec", job.sig))
+        raise RuntimeError("boom")
+
+    svc.submit("sig-b", build, family="lm")
+    assert svc.drain(timeout_s=10.0)
+    assert svc.stats["failures"] == 3      # 1 initial + 2 retries
+    assert svc.stats["retries"] == 2
+    assert svc.stats["quarantined"] == 1
+    assert [j.sig for j in quarantined] == ["sig-b"]
+    # Booked under the job's qkey — the key the dispatch path checks —
+    # and permanent after exceeding the quarantine's own retry cap.
+    assert q.blocks(("lm", ("spec", "sig-b")), round_=10 ** 9)
+    svc.shutdown()
+
+
+def test_service_timeout_abandons_and_retry_lands():
+    svc = CompileService(workers=1, timeout_s=0.2, max_retries=2,
+                         retry_backoff_s=0.01)
+    calls = []
+
+    def build(job, span_args, abort):
+        calls.append(job.attempts)
+        if len(calls) == 1:
+            # Hang past the timeout, polling abort like an abort-aware
+            # build does; exits soon after the sweep abandons the worker.
+            deadline = time.monotonic() + 5.0
+            while time.monotonic() < deadline and not abort():
+                time.sleep(0.01)
+            raise RuntimeError("abandoned")
+        return 0.01
+
+    svc.submit("sig-c", build)
+    assert svc.drain(timeout_s=10.0)
+    assert svc.stats["timeouts"] == 1
+    assert svc.stats["retries"] == 1
+    assert svc.stats["landed"] == 1
+    assert len(calls) == 2
+    svc.shutdown()
+    # Every thread (including the abandoned one) exits after shutdown.
+    for w in svc._workers + svc._abandoned:
+        assert not w.thread.is_alive()
+
+
+# -- coarse bridging precondition ---------------------------------------------
+
+
+def test_coarse_count_pad_shares_spec(workloads):
+    """A round plan padded to a coarser count bucket has the same topology
+    — hence bucket signature — as an all-dummy graph of that count: the
+    invariant that makes both the coarse bridge tier and warm-started
+    executables serve real rounds."""
+    eng = _engine(workloads, async_compile=False)
+    ex = eng._executor("lm")
+    pol = eng.policy_for("lm")
+    g8, _ = build_lm_feed_round_graph(RoundPlan(), count=8)
+    g16, _ = build_lm_feed_round_graph(RoundPlan(), count=16)
+    assert g8.topology_key() != g16.topology_key()
+    assert ex.pack_for(g8, pol).spec != ex.pack_for(g16, pol).spec
+    # Explicit coarser-ladder packs are cached under their own key too
+    # (the ladder is part of the pack-cache key).
+    assert ex.pack_for(g8, pol).spec != ex.pack_for(g8, pol,
+                                                    ladder=(16,)).spec
+
+
+def test_coarse_bridge_serves_while_native_compiles(workloads):
+    sync = _engine(workloads, async_compile=False)
+    r1 = _lm_trace(n=3)
+    sync.submit_many(r1)
+    sync.run()
+    r2 = _lm_trace(n=3, seed=1)
+    sync.submit_many(r2)
+    sync.run()
+
+    eng = _engine(workloads, async_compile=True)
+    # Warm only the coarser count-16 bucket, as a warm-start or an earlier
+    # bigger round would have.
+    assert eng.prewarm({"families": {"lm": {"counts": [16]}}}) == 1
+    assert eng._compiler.drain(timeout_s=60.0)
+    a1 = _lm_trace(n=3)
+    eng.submit_many(a1)
+    eng.run()
+    # The native count-8 bucket was missing, so rounds bridged through the
+    # compiled count-16 executable instead of falling to the floor.
+    assert eng.stats.tier_rounds.get("coarse", 0) >= 1
+    assert eng.stats.tier_rounds.get("interpreted", 0) == 0
+    # By the second wave the native build has landed: hot-swap to it.
+    a2 = _lm_trace(n=3, seed=1)
+    eng.submit_many(a2)
+    eng.run()
+    eng.close()
+    assert eng.stats.tier_rounds.get("bucketed", 0) >= 1
+    assert eng.stats.n_hotswaps >= 1
+    # Bit-identical across tiers (dummy pad lanes never touch real ones).
+    assert _tokens(a1) == _tokens(r1)
+    assert _tokens(a2) == _tokens(r2)
+
+
+# -- engine integration --------------------------------------------------------
+
+
+def test_async_bit_identical_to_sync_with_hotswap(workloads):
+    reqs_a = _lm_trace()
+    sync = _engine(workloads, async_compile=False)
+    sync.submit_many(reqs_a)
+    sync.run()
+
+    reqs_b = _lm_trace()
+    eng = _engine(workloads, async_compile=True, compile_workers=2,
+                  compile_timeout_s=30.0)
+    eng.submit_many(reqs_b)
+    # Deterministic hot-swap: serve one round (misses degrade, job
+    # submitted), let the build land, then finish the trace compiled.
+    eng.step()
+    assert eng._compiler.stats["submitted"] >= 1
+    assert eng._compiler.drain(timeout_s=60.0)
+    eng.run()
+    eng.close()
+
+    assert _tokens(reqs_b) == _tokens(reqs_a)
+    assert all(r.status == COMPLETED for r in reqs_b)
+    assert eng.stats.tier_rounds.get("interpreted", 0) >= 1
+    assert eng.stats.tier_rounds.get("bucketed", 0) >= 1
+    assert eng.stats.n_hotswaps >= 1
+    assert eng.stats.compile_jobs_landed >= 1
+    # The tentpole property: zero lowering on the serve loop.
+    assert eng.stats.lower_s == 0.0
+    assert eng.stats.lower_bg_s > 0.0
+
+
+def test_compile_hang_contained_within_timeout(workloads):
+    reqs_clean = _lm_trace(n=3)
+    clean = _engine(workloads, async_compile=False)
+    clean.submit_many(reqs_clean)
+    clean.run()
+
+    reqs = _lm_trace(n=3)
+    inj = FaultInjector(compile_hang=(1, 10.0))
+    eng = _engine(workloads, async_compile=True, compile_workers=1,
+                  compile_timeout_s=2.0, fault_injector=inj)
+    eng.submit_many(reqs)
+    t0 = time.monotonic()
+    eng.run()
+    wall = time.monotonic() - t0
+    eng.close()
+
+    # The 10s hang never blocked a round: the hung attempt rode out its
+    # 2s budget on a worker thread, the retry landed, and total wall stays
+    # far below the hang duration.
+    assert wall < 8.0
+    assert eng.stats.compile_jobs_timed_out >= 1
+    assert eng.stats.compile_jobs_retried >= 1
+    assert eng.stats.compile_jobs_landed >= 1
+    assert eng.stats.compile_jobs_quarantined == 0
+    assert all(r.status == COMPLETED for r in reqs)
+    assert _tokens(reqs) == _tokens(reqs_clean)
+
+
+def test_compile_fail_quarantines_and_dumps_flight(workloads):
+    reqs = _lm_trace(n=3)
+    inj = FaultInjector(compile_fail=99)   # every attempt fails
+    eng = _engine(workloads, async_compile=True, compile_workers=1,
+                  compile_timeout_s=5.0, fault_injector=inj)
+    eng.submit_many(reqs)
+    eng.run()
+    eng.close()
+    assert eng.stats.compile_jobs_quarantined >= 1
+    # Requests still complete — at the interpreted floor.
+    assert all(r.status == COMPLETED for r in reqs)
+    assert eng.stats.tier_rounds.get("bucketed", 0) == 0
+    assert eng.flight is not None
+    assert "compile_quarantine" in {d["reason"] for d in eng.flight.dumps}
+
+
+def test_warmset_roundtrip_and_prewarm(tmp_path, workloads):
+    reqs = _lm_trace()
+    eng = _engine(workloads, async_compile=True)
+    eng.submit_many(reqs)
+    eng.run()
+    ws = eng.warmset()
+    eng.close()
+    counts = ws["families"]["lm"]["counts"]
+    assert counts, "served lm rounds must record their padded counts"
+
+    cache_dir = str(tmp_path / "xla-cache")
+    assert save_warmset(cache_dir, ws) == warmset_path(cache_dir)
+    assert load_warmset(cache_dir) == ws
+    # Corrupt file degrades to a cold start, never an error.
+    with open(warmset_path(cache_dir), "w") as f:
+        f.write('{"version": 1, "families": {')
+    with pytest.warns(RuntimeWarning):
+        assert load_warmset(cache_dir) == {}
+    assert load_warmset(str(tmp_path / "missing")) == {}
+
+    # A prewarmed engine's first lm round starts compiled: no interpreted
+    # rounds, no hot-swaps (nothing ever served degraded).
+    eng2 = _engine(workloads, async_compile=True)
+    assert eng2.prewarm(ws) >= 1
+    assert eng2._compiler.drain(timeout_s=60.0)
+    eng2.submit_many(_lm_trace())
+    eng2.run()
+    eng2.close()
+    assert eng2.stats.tier_rounds.get("interpreted", 0) == 0
+    assert eng2.stats.n_hotswaps == 0
+
+
+def test_checkpoint_restore_resubmits_inflight(workloads):
+    reqs = _lm_trace(n=3)
+    # Pin the build in flight: it hangs longer than the test but far under
+    # the job timeout, so at snapshot time it is unresolved.
+    inj = FaultInjector(compile_hang=(1, 60.0))
+    eng = _engine(workloads, async_compile=True, compile_workers=1,
+                  compile_timeout_s=120.0, fault_injector=inj)
+    eng.submit_many(reqs)
+    eng.step()
+    assert eng._compiler.pending_count() == 1
+    payload = snapshot_engine(eng, reason="test")
+    eng.close()   # abandons the hung worker; its hook poll exits promptly
+
+    assert payload["config"]["async_compile"] is True
+    inflight = payload["compile"]["in_flight"]
+    assert inflight and inflight[0]["family"] == "lm"
+    assert payload["compile"]["warm_counts"]
+
+    eng2 = ServeEngine.restore(payload, workloads)
+    assert eng2.async_compile
+    # The interrupted build was re-submitted before the first round.
+    assert eng2._compiler.pending_count() >= 1
+    eng2.run()
+    eng2.close()
+    assert all(eng2.requests[r.rid].status == COMPLETED for r in reqs)
+    assert eng2.stats.compile_jobs_landed >= 1
+
+
+def test_run_drains_pool_and_close_stops_workers(workloads):
+    eng = _engine(workloads, async_compile=True, compile_workers=2)
+    eng.submit_many(_lm_trace())
+    eng.run()
+    # Drain-before-exit: nothing in flight once run() returns.
+    assert eng._compiler.pending_count() == 0
+    svc = eng._compiler
+    eng.close()
+    for w in svc._workers + svc._abandoned:
+        assert w.thread is None or not w.thread.is_alive()
+    # Closed service refuses new work.
+    assert not svc.submit("post-close", lambda j, s, a: 0.0)
+
+
+def test_fault_spec_parses_hang_and_slow():
+    inj = FaultInjector.from_spec("compile_hang=2*7.5,compile_slow=0.25")
+    assert inj.compile_hang == (2, 7.5)
+    assert inj.compile_slow == (1, 0.25)
+    with pytest.raises(ValueError, match="compile_hang"):
+        FaultInjector.from_spec("bogus_key=1")
