@@ -67,9 +67,12 @@ def platform_payload(mesh=None) -> dict:
     measured work is done so the snapshot carries the run's counters."""
     import jax
 
+    from repro.launch.env import active_profile
+
     return {"jax_platform": jax.default_backend(),
             "jax_device_count": jax.device_count(),
             "mesh_shape": dict(mesh.shape) if mesh is not None else {},
+            "perf_profile": active_profile(),
             "obs_metrics": default_registry().snapshot()}
 
 

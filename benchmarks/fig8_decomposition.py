@@ -32,7 +32,7 @@ from .common import emit, make_executor
 COMPONENTS = {
     "schedule": ("round.schedule", "plan.schedule", "interp.schedule"),
     "memory": ("round.pack", "plan.pack", "plan.lower", "plan.h2d",
-               "round.scatter", "round.feed"),
+               "round.scatter", "round.feed", "round.feed_stage"),
     "execution": ("plan.dispatch", "plan.block", "interp.exec"),
     "compile": ("xla.compile",),
 }
@@ -65,6 +65,21 @@ def span_self_times(events) -> list[dict]:
     return spans
 
 
+def overlap_fraction(spans, names=("round.pack",)) -> float:
+    """Fraction of the named spans' self time carrying the ``overlap``
+    stamp — work the pipelined engine (DESIGN.md §9) performed while the
+    previous round's dispatch was still in flight on the device, i.e. off
+    the serve loop's critical path. 0.0 when the named spans never appear
+    (serial engine, single-shot-only traces)."""
+    tot = ov = 0.0
+    for s in spans:
+        if s["name"] in names:
+            tot += s["self_us"]
+            if s.get("args", {}).get("overlap"):
+                ov += s["self_us"]
+    return ov / tot if tot else 0.0
+
+
 def decompose_trace(path: str) -> dict:
     """Fig. 8 components (ms of self time) from a Chrome trace-event file.
 
@@ -82,7 +97,7 @@ def decompose_trace(path: str) -> dict:
     spans = span_self_times(obj["traceEvents"])
     name2comp = {n: c for c, names in COMPONENTS.items() for n in names}
     comp = {c: 0.0 for c in COMPONENTS}
-    other = attributed = bg = 0.0
+    other = attributed = bg = overlapped = 0.0
     serve_tids = {s.get("tid", 0) for s in spans
                   if s["name"] in ("serve.run", "serve.round")}
     total_run = sum(s["dur"] for s in spans if s["name"] == "serve.run")
@@ -95,11 +110,23 @@ def decompose_trace(path: str) -> dict:
         if c is not None:
             comp[c] += s["self_us"]
             attributed += s["self_us"]
+            # Pipelined rounds (DESIGN.md §9) stamp speculative schedule/
+            # pack spans with ``overlap``: that self time ran concurrently
+            # with the in-flight device dispatch, so while it is still
+            # attributed to its component above, it is NOT critical-path
+            # latency — totalled here so the decomposition can report how
+            # much host work the pipeline actually hid.
+            if s.get("args", {}).get("overlap"):
+                overlapped += s["self_us"]
         else:
             other += s["self_us"]
     out = {f"{c}_ms": v / 1e3 for c, v in comp.items()}
     out["other_ms"] = other / 1e3
     out["compile_bg_ms"] = bg / 1e3
+    out["overlapped_ms"] = overlapped / 1e3
+    out["pack_overlap_frac"] = overlap_fraction(
+        [s for s in spans if not s.get("args", {}).get("bg")
+         and (not serve_tids or s.get("tid", 0) in serve_tids)])
     out["total_ms"] = (attributed + other) / 1e3
     out["n_spans"] = len(spans)
     # Fraction of the serve loop's wall attributed to *named* component
@@ -176,7 +203,9 @@ def main(argv=None) -> int:
         emit("fig8/from-trace", d["total_ms"] * 1e3,
              ";".join(f"{k}={d[k]:.2f}" for k in
                       ("schedule_ms", "memory_ms", "execution_ms",
-                       "compile_ms", "compile_bg_ms", "other_ms"))
+                       "compile_ms", "compile_bg_ms", "other_ms",
+                       "overlapped_ms"))
+             + f";pack_overlap={d['pack_overlap_frac']:.2f}"
              + f";coverage={d['coverage']:.2f};spans={d['n_spans']}")
         return 0
     run(batch_size=args.batch_size, model_size=args.model_size,

@@ -445,6 +445,26 @@ class PlanResult:
         rows = np.asarray([self._row_of[(key, i)] for i in ids], np.int32)
         return self.arenas[key][rows]
 
+    def arena_rows(self, fld: str, ids) -> tuple[jnp.ndarray, np.ndarray]:
+        """(arena, row-index vector) for ``fld`` at ``ids`` — the raw
+        ingredients of :meth:`field`, for callers that want to fuse the
+        gather into a larger jitted program (e.g. the serve engine's
+        single-dispatch commit scatter) instead of paying one eager jax
+        dispatch per field."""
+        keys = set()
+        for i in ids:
+            impl = self._impls[self._graph.nodes[i].type]
+            if fld not in impl.out_fields:
+                raise KeyError(f"node {i} ({impl.name}) has no field {fld!r}")
+            keys.add((fld, tuple(impl.out_fields[fld])))
+        if len(keys) != 1:
+            raise ValueError(
+                f"field {fld!r} has mixed shapes "
+                f"{sorted(k[1] for k in keys)} across the requested nodes")
+        key = keys.pop()
+        rows = np.asarray([self._row_of[(key, i)] for i in ids], np.int32)
+        return self.arenas[key], rows
+
 
 class CompiledPlan:
     """A schedule + memory plan lowered to a single jitted program whose
@@ -1060,30 +1080,90 @@ class BucketedPlanExecutor:
         """Execute ``graph`` through an explicit pack — the pack need not be
         the graph's native one, only index/aux-compatible (the coarse-bucket
         tier runs a small round through a wider pack of the same topology)."""
+        return self.dispatch_packed(graph, pack, stats, params=params).block()
+
+    def dispatch_packed(self, graph: Graph, pack: BucketedPack,
+                        stats: ExecStats | None = None,
+                        params: Any = None) -> "InFlightDispatch":
+        """Launch ``graph`` through ``pack`` without synchronizing: the
+        bucket program is handed to the device (jax dispatch is async) and
+        an :class:`InFlightDispatch` handle comes back immediately. The
+        caller overlaps host work — the serve engine packs round t+1 here —
+        and calls ``handle.block()`` when it actually needs the arenas.
+
+        Donation rotation and stat accounting are deferred to ``block()``:
+        until the caller commits, the cached executable entry still owns
+        the pre-dispatch pool, so a failed/abandoned round leaves the cache
+        coherent."""
         stats = stats if stats is not None else ExecStats()
         tr = self.tracer
         params = params if params is not None else self.params
         with tr.span("plan.h2d", cat="plan"):
-            aux = _gather_node_aux(graph, pack.aux_perm)
+            # Host gather only: the AOT executable accepts the np vector
+            # and folds the transfer into the dispatch call, instead of
+            # paying a separate eager device-put dispatch per round.
+            aux = _node_aux_np(graph, pack.aux_perm)
         key, entry, compile_s = self._ensure_executable(pack, params)
         exe, pool, impls_pin = entry
         t1 = time.perf_counter()
         with tr.span("plan.dispatch", cat="plan"):
             arenas = exe(params, pack.idxpack, aux, pool)
-        with tr.span("plan.block", cat="plan"):
-            jax.block_until_ready(list(arenas.values()))
-        dt = time.perf_counter() - t1
-        if self.donate:
-            self._exes[key] = (exe, arenas, impls_pin)
-        if compile_s > 0:
+        dispatch_s = time.perf_counter() - t1
+        return InFlightDispatch(self, graph, pack, key, exe, arenas,
+                                impls_pin, stats, dispatch_s, compile_s)
+
+
+class InFlightDispatch:
+    """Handle to a dispatched-but-unsynchronized bucket program run.
+
+    ``block()`` waits for the device, rotates the donation pool, books the
+    exec stats (dispatch-call time + block-wait time — the overlap gap in
+    between is *not* charged, so ``exec_s`` stays honest under pipelining)
+    and returns the :class:`PlanResult`. Idempotent: repeated calls return
+    the same result."""
+
+    def __init__(self, executor: BucketedPlanExecutor, graph: Graph,
+                 pack: BucketedPack, key: tuple, exe: Any, arenas: dict,
+                 impls_pin: Any, stats: ExecStats, dispatch_s: float,
+                 compile_s: float):
+        self._ex = executor
+        self._graph = graph
+        self._pack = pack
+        self._key = key
+        self._exe = exe
+        self._arenas = arenas
+        self._impls_pin = impls_pin
+        self._stats = stats
+        self._dispatch_s = dispatch_s
+        self._compile_s = compile_s
+        self._result: PlanResult | None = None
+
+    @property
+    def pending(self) -> bool:
+        return self._result is None
+
+    def block(self) -> PlanResult:
+        if self._result is not None:
+            return self._result
+        ex = self._ex
+        t0 = time.perf_counter()
+        with ex.tracer.span("plan.block", cat="plan"):
+            jax.block_until_ready(list(self._arenas.values()))
+        wait_s = time.perf_counter() - t0
+        if ex.donate:
+            ex._exes[self._key] = (self._exe, self._arenas, self._impls_pin)
+        st = self._stats
+        if self._compile_s > 0:
             # Compilation ran before the timed dispatch; charge it to
             # lower_time so the Fig. 8 decomposition stays honest.
-            stats.lower_time += compile_s
-            stats.n_compiles += 1
-        stats.exec_time += dt
-        stats.n_batches += pack.stats.n_steps
-        stats.n_launches += 1
-        return PlanResult(graph, self.impls, arenas, pack.row_of)
+            st.lower_time += self._compile_s
+            st.n_compiles += 1
+        st.exec_time += self._dispatch_s + wait_s
+        st.n_batches += self._pack.stats.n_steps
+        st.n_launches += 1
+        self._result = PlanResult(self._graph, ex.impls, self._arenas,
+                                  self._pack.row_of)
+        return self._result
 
 
 # ---------------------------------------------------------------------------
@@ -1158,24 +1238,56 @@ class ShardedBucketedPlanExecutor(BucketedPlanExecutor):
         the per-dispatch normalization below is a no-op."""
         return NamedSharding(self.mesh, PartitionSpec(self.axis))
 
+    def sharded_executable_key(self, sspec: BucketSpec, params: Any,
+                               shard_params: Any) -> tuple:
+        return (self._ns, sspec, _params_kind(params),
+                _params_kind(shard_params))
+
+    def sharded_executable_ready(self, sspec: BucketSpec, params: Any,
+                                 shard_params: Any) -> bool:
+        """True when the shard_map executable is already cached — a pure
+        probe (no build, no LRU refresh), the sharded twin of
+        :meth:`BucketedPlanExecutor.executable_ready`."""
+        key = self.sharded_executable_key(sspec, params, shard_params)
+        return self._exes.peek(key) is not None
+
     def _ensure_sharded_executable(self, sspec: BucketSpec, params: Any,
                                    shard_params: Any
                                    ) -> tuple[Any, tuple, float]:
-        """Returns ``(key, entry, compile_s)`` — see
+        return self.build_sharded_executable(sspec, params, shard_params)
+
+    def build_sharded_executable(self, sspec: BucketSpec, params: Any,
+                                 shard_params: Any,
+                                 span_args: dict | None = None,
+                                 abort_check: Callable[[], bool] | None = None
+                                 ) -> tuple[Any, tuple, float]:
+        """Build (or fetch) the shard_map executable for ``sspec``; returns
+        ``(key, entry, compile_s)`` — see
         :meth:`BucketedPlanExecutor._ensure_executable` for why the entry
-        is returned instead of re-read from the shared cache."""
-        key = (self._ns, sspec, _params_kind(params),
-               _params_kind(shard_params))
+        is returned instead of re-read from the shared cache. Like
+        :meth:`BucketedPlanExecutor.build_executable` this is safe from a
+        background compile worker: caches are locked, ``span_args`` stamp
+        the ``xla.compile`` span, and ``abort_check`` lets an abandoned
+        job bail before burning the (expensive) shard_map build."""
+        key = self.sharded_executable_key(sspec, params, shard_params)
         entry = self._exes.get(key)
         if entry is not None:
             return key, entry, 0.0
+        ctx = {"kind": "sharded", "sig": _sig_digest(sspec)}
+        ctx.update(span_args or {})
+        if abort_check is not None:
+            ctx["abort"] = abort_check
         if self.compile_hook is not None:
-            _call_compile_hook(self.compile_hook, key,
-                               {"kind": "sharded", "sig": _sig_digest(sspec)})
+            _call_compile_hook(self.compile_hook, key, ctx)
+        if abort_check is not None and abort_check():
+            raise RuntimeError(
+                f"compile of sharded bucket {_sig_digest(sspec)} aborted "
+                f"(job abandoned before the XLA build)")
         with self.tracer.span("xla.compile", cat="compile", kind="sharded",
                               bucket=_sig_digest(sspec),
                               steps=len(sspec.steps),
-                              shards=sspec.n_shards) as tsp:
+                              shards=sspec.n_shards,
+                              **(span_args or {})) as tsp:
             t0 = time.perf_counter()
             prog = _BucketProgram(sspec, self.impls,
                                   gather_interpret=self.gather_interpret,

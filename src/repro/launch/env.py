@@ -1,0 +1,122 @@
+"""Tuned launcher performance profile (ROADMAP; SNIPPETS 1-3 idiom).
+
+Benchmarks should measure the system, not the allocator or the logging
+subsystem. The related repos' run scripts converge on the same recipe —
+tcmalloc via ``LD_PRELOAD``, TF/absl log suppression, an explicit
+``xla_force_host_platform_device_count``, and pinned default dtype bits —
+applied *before* the process touches jax. This module packages that recipe
+behind one call:
+
+- :func:`apply_perf_profile` sets the env knobs and, when a tcmalloc
+  shared object exists on the host but is not yet preloaded, **re-execs
+  the process once** with ``LD_PRELOAD`` pointing at it (an allocator
+  cannot be swapped in after startup). The re-exec is guarded by a marker
+  env var so it happens at most once, and is skipped entirely when
+  tcmalloc is absent — the container need not ship it.
+- :func:`active_profile` reports what is actually in effect, so
+  ``benchmarks/common.py`` can stamp it into every ``BENCH_*.json``
+  payload: a number measured under glibc malloc is distinguishable from
+  one measured under tcmalloc.
+
+All settings are ``setdefault`` — an operator's explicit environment
+always wins over the profile.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+__all__ = ["find_tcmalloc", "apply_perf_profile", "active_profile",
+           "add_perf_profile_arg", "maybe_apply_perf_profile"]
+
+# Marker guarding the one-shot re-exec (and recording that the profile ran).
+_MARKER = "REPRO_PERF_PROFILE"
+
+# Where the related repos' run scripts (and common distros) put tcmalloc.
+_TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+    "/usr/lib/libtcmalloc_minimal.so.4",
+    "/usr/lib64/libtcmalloc.so.4",
+    "/opt/homebrew/lib/libtcmalloc.dylib",
+)
+
+
+def find_tcmalloc() -> str | None:
+    """First tcmalloc shared object present on this host, or None."""
+    for path in _TCMALLOC_CANDIDATES:
+        if os.path.exists(path):
+            return path
+    return None
+
+
+def apply_perf_profile(host_devices: int | None = None,
+                       reexec: bool = True) -> dict:
+    """Apply the tuned launcher profile; returns :func:`active_profile`.
+
+    Call before importing jax (XLA reads ``XLA_FLAGS`` at backend init).
+    ``host_devices`` forces that many host-platform devices unless the
+    operator's ``XLA_FLAGS`` already pins a count. When ``reexec`` is true
+    and tcmalloc exists but is not preloaded, the process restarts itself
+    once via ``os.execv`` with ``LD_PRELOAD`` set — this call then never
+    returns in the first process.
+    """
+    env = os.environ
+    env.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    # Silence tcmalloc's large-allocation warnings (arena pools trip the
+    # default threshold constantly).
+    env.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD", "60000000000")
+    env.setdefault("JAX_DEFAULT_DTYPE_BITS", "32")
+    if host_devices and host_devices > 0:
+        flags = env.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            env["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{host_devices}").strip()
+    tc = find_tcmalloc()
+    already = env.get(_MARKER) == "1"
+    preloaded = tc is not None and tc in env.get("LD_PRELOAD", "")
+    if reexec and tc is not None and not preloaded and not already:
+        env["LD_PRELOAD"] = ":".join(
+            p for p in (env.get("LD_PRELOAD", ""), tc) if p)
+        env[_MARKER] = "1"
+        sys.stdout.flush()
+        sys.stderr.flush()
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+    env[_MARKER] = "1"
+    return active_profile()
+
+
+def active_profile() -> dict:
+    """What is in effect *now* — the ``perf_profile`` stamp for
+    ``BENCH_*.json`` payloads (honest even when the profile never ran)."""
+    ld = os.environ.get("LD_PRELOAD", "")
+    return {
+        "applied": os.environ.get(_MARKER) == "1",
+        "tcmalloc": "tcmalloc" in ld,
+        "ld_preload": ld,
+        "tf_cpp_min_log_level": os.environ.get("TF_CPP_MIN_LOG_LEVEL", ""),
+        "tcmalloc_large_alloc_report_threshold":
+            os.environ.get("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD", ""),
+        "jax_default_dtype_bits":
+            os.environ.get("JAX_DEFAULT_DTYPE_BITS", ""),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+    }
+
+
+def add_perf_profile_arg(ap) -> None:
+    """``--perf-profile``: opt into the tuned environment (launchers and
+    benchmarks share the flag)."""
+    ap.add_argument("--perf-profile", action="store_true",
+                    help="apply the tuned launcher environment before "
+                         "serving: tcmalloc LD_PRELOAD (one-shot re-exec "
+                         "when the library exists), TF log suppression, "
+                         "pinned JAX_DEFAULT_DTYPE_BITS; the active "
+                         "profile is stamped into benchmark payloads")
+
+
+def maybe_apply_perf_profile(args, host_devices: int | None = None) -> None:
+    if getattr(args, "perf_profile", False):
+        apply_perf_profile(host_devices=host_devices)

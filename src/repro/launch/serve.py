@@ -148,6 +148,11 @@ def main(argv=None):
     ap.add_argument("--jax-cache", default="",
                     help="persistent XLA compilation cache dir (residual "
                          "per-bucket compiles survive process restarts)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable round pipelining (DESIGN.md §9): run "
+                         "pack/dispatch/block serially each round instead "
+                         "of overlapping next-round host packing with the "
+                         "in-flight device dispatch")
     ap.add_argument("--no-async-compile", action="store_true",
                     help="compile bucket executables synchronously on the "
                          "serve loop (the pre-§8 behavior). By default "
@@ -220,15 +225,22 @@ def main(argv=None):
                          "engine instead (e.g. qwen2-0.5b)")
     ap.add_argument("--checkpoint", default="",
                     help="restore TransformerLM weights (legacy path only)")
+    from repro.launch.env import add_perf_profile_arg, maybe_apply_perf_profile
+    add_perf_profile_arg(ap)
     args = ap.parse_args(argv)
+
+    # Must run before anything imports jax: the profile sets XLA_FLAGS and
+    # may re-exec the process once to get tcmalloc into LD_PRELOAD.
+    maybe_apply_perf_profile(
+        args, host_devices=args.devices if args.devices > 1 else None)
 
     # Flag-compatibility and device-count checks fail fast, before any
     # policy training or trace construction.
     if args.devices > 1 and args.plan != "bucketed":
         ap.error("--devices > 1 requires --plan bucketed (replicas shard "
                  "the bucketed executable)")
-    # Async compile is the bucketed-plan default; the sharded path still
-    # lowers synchronously (the engine gates on n_shards == 1 itself).
+    # Async compile is the bucketed-plan default, on the single-device and
+    # the sharded (--devices > 1) paths alike (DESIGN.md §8).
     use_async = args.plan == "bucketed" and not args.no_async_compile
     if args.warm_start and not use_async:
         ap.error("--warm-start needs async compile "
@@ -320,6 +332,10 @@ def main(argv=None):
             async_compile=use_async,
             compile_workers=args.compile_workers,
             compile_timeout_s=args.compile_timeout)
+        if args.no_pipeline:
+            # The checkpoint config carries the pipeline flag; --no-pipeline
+            # on the resume command line still wins (nothing has run yet).
+            eng.pipeline = False
         print(f"# restored round {eng._round} from {src} "
               f"({len(eng.requests)} ledger requests, "
               f"{len(eng.queue)} still queued)")
@@ -339,7 +355,8 @@ def main(argv=None):
                                            else args.steal_threshold),
                           async_compile=use_async,
                           compile_workers=args.compile_workers,
-                          compile_timeout_s=args.compile_timeout)
+                          compile_timeout_s=args.compile_timeout,
+                          pipeline=not args.no_pipeline)
         eng.submit_many(reqs)
 
     if args.warm_start and args.jax_cache:
@@ -392,6 +409,13 @@ def main(argv=None):
           f"rejected {stats.requests_rejected}; "
           f"{stats.n_contained_errors} contained errors, "
           f"{stats.n_quarantine_events} quarantine events")
+    if (stats.n_pipelined_rounds or stats.n_spec_cancelled
+            or stats.n_merge_aligned_rounds):
+        print(f"pipeline: {stats.n_pipelined_rounds} overlapped round(s) "
+              f"({stats.n_overlapped_packs} pack(s) hidden behind dispatch), "
+              f"{stats.n_spec_cancelled} speculation(s) cancelled, "
+              f"{stats.n_merge_aligned_rounds} merge-aligned sharded "
+              f"round(s)")
     if (stats.n_checkpoints or stats.n_restores or stats.n_resize_events
             or stats.n_entries_stolen):
         print(f"durability: {stats.n_checkpoints} checkpoint(s), "

@@ -26,8 +26,11 @@ full vocabulary):
 
 - ``serve.run`` / ``serve.round`` — engine loop and one scheduler round,
 - ``round.schedule`` / ``round.pack`` / ``round.lm`` / ``round.single`` /
-  ``round.scatter`` / ``round.feed`` — engine-side round phases (planning,
-  feed-graph packing, family sub-rounds, state scatter-back, token feed),
+  ``round.scatter`` / ``round.feed`` / ``round.feed_stage`` — engine-side
+  round phases (planning, feed-graph packing, family sub-rounds, state
+  scatter-back, token feed, prefill slot staging); pipelined rounds
+  (DESIGN.md §9) stamp speculative ``round.schedule``/``round.pack`` spans
+  with ``overlap`` and the commit-side residue with ``promoted``,
 - ``plan.pack`` / ``plan.schedule`` / ``plan.lower`` / ``plan.h2d`` /
   ``plan.dispatch`` / ``plan.block`` — executor-side phases (host packing,
   host-to-device transfer, dispatch, block-until-ready device execution),

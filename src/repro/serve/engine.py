@@ -54,9 +54,10 @@ from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -75,8 +76,9 @@ from .faults import (BAD_TOPOLOGY, DEADLINE_EXCEEDED, EXEC_ERROR,
 from .queue import (COMPLETED, FAILED, TIMED_OUT, AdmissionQueue,
                     ServeRequest)
 from .scheduler import (COUNT_BUCKET_MIN, ContinuousScheduler, RoundPlan,
-                        bucket_len, build_lm_feed_round_graph,
-                        build_lm_round_graph, merge_request_graphs,
+                        align_single_shot_groups, bucket_len,
+                        build_lm_feed_round_graph, build_lm_round_graph,
+                        merge_request_graphs, next_feed_token,
                         partition_singles)
 
 
@@ -133,6 +135,17 @@ class ServeStats:
     shard_tokens: list[int] = field(default_factory=list)  # lm tokens per shard
     latency_s: list[float] = field(default_factory=list)   # admit -> done
     ttft_s: list[float] = field(default_factory=list)      # admit -> first out
+    # Round pipelining (DESIGN.md §9): rounds committed through the
+    # two-stage path, next-round packs overlapped with an in-flight
+    # dispatch, and speculative packs rolled back (round-t failure, clock
+    # drift, or a snapshot boundary).
+    n_pipelined_rounds: int = 0
+    n_overlapped_packs: int = 0
+    n_spec_cancelled: int = 0
+    # Sharded single-shot rounds whose diverging shard specs were padded
+    # back onto one shared bucket signature (spec-aligned merging) instead
+    # of degrading to per-shard dispatch.
+    n_merge_aligned_rounds: int = 0
 
     _SUMMED = ("n_batches", "n_launches", "n_compiles", "tokens_out",
                "outputs_out", "requests_done", "plan_cache_hits",
@@ -144,7 +157,9 @@ class ServeStats:
                "n_restores", "n_resize_events", "n_entries_evacuated",
                "n_entries_stolen", "n_hotswaps", "compile_jobs_submitted",
                "compile_jobs_landed", "compile_jobs_retried",
-               "compile_jobs_timed_out", "compile_jobs_quarantined")
+               "compile_jobs_timed_out", "compile_jobs_quarantined",
+               "n_pipelined_rounds", "n_overlapped_packs",
+               "n_spec_cancelled", "n_merge_aligned_rounds")
     # Shards serve the same rounds concurrently, so wall-clock style fields
     # take the max across parts (like n_rounds), never the sum — summing
     # would inflate them K-fold and understate tok_per_s.
@@ -196,6 +211,64 @@ class ServeStats:
         return self.tokens_out / max(self.n_rounds, 1)
 
 
+@jax.jit
+def _fused_zero(slots, pools):
+    """Single-dispatch prefill staging: zero the fresh entries' slots in
+    every state pool at once instead of one eager copy-on-write update per
+    field. Shares its jit cache process-wide (module level, like
+    :func:`_fused_commit` below)."""
+    return [p.at[slots].set(0.0) for p in pools]
+
+
+@jax.jit
+def _fused_commit(y_arena, y_rows, slots, state_arenas, state_rows, pools):
+    """Single-dispatch lm round commit: argmax the entries' output rows
+    into next tokens and scatter their recurrent state back into the slot
+    pools. Module-level so the jit cache is shared by every engine in the
+    process; retraces only per live-entry count (bounded by ``max_slots``).
+    Pools are not donated — a checkpoint may still hold the old arrays."""
+    toks = jnp.argmax(y_arena[y_rows], axis=-1)
+    new_pools = [p.at[slots].set(a[r])
+                 for p, a, r in zip(pools, state_arenas, state_rows)]
+    return toks, new_pools
+
+
+class _ReadyRound:
+    """Degenerate in-flight handle for rounds that ran eagerly (coarse
+    bridge, interpreted floor): ``block()`` just hands back the result.
+    Lets the pipelined commit path treat every tier uniformly."""
+
+    pending = False
+
+    def __init__(self, result):
+        self._result = result
+
+    def block(self):
+        return self._result
+
+
+@dataclass
+class _Speculation:
+    """A round packed ahead of its commit (DESIGN.md §9): the plan and
+    feed graph for round ``round`` at predicted clock ``now``, plus the
+    scheduler/queue snapshot (and request feed fields) to roll back to if
+    round t fails or the prediction goes stale."""
+
+    round: int
+    now: float
+    plan: RoundPlan
+    graph: Any
+    entries: list
+    snap: tuple
+    feed_undo: list
+
+
+class _SpecUnsafe(Exception):
+    """Raised inside the speculative pack when a condition is met that the
+    serial loop would handle with side effects (park restore, admission
+    timeout) — the speculation rolls back and round t+1 plans serially."""
+
+
 class ServeEngine:
     """Round-driven continuous-batching engine over typed request graphs.
 
@@ -225,7 +298,8 @@ class ServeEngine:
                  steal_threshold: int | None = None,
                  async_compile: bool = False,
                  compile_workers: int = 2,
-                 compile_timeout_s: float = 30.0):
+                 compile_timeout_s: float = 30.0,
+                 pipeline: bool = True):
         self.compiled = compiled
         self.bucketed = bucketed
         self.n_shards = int(n_shards)
@@ -275,12 +349,12 @@ class ServeEngine:
         # a supervised background worker pool; rounds whose executable has
         # not landed degrade (coarse bucket -> interpreted floor) instead of
         # blocking on XLA, and hot-swap at a later round boundary. Library
-        # default OFF; the serve launcher turns it on. Only the
-        # single-device bucketed path submits jobs — the sharded path keeps
-        # synchronous builds (its executables rebuild on mesh resize, and a
-        # shard_map round cannot run partially compiled).
-        self.async_compile = bool(async_compile and compiled and bucketed
-                                  and self.n_shards == 1)
+        # default OFF; the serve launcher turns it on. The sharded (K>1)
+        # path submits whole shard_map builds as single jobs and serves
+        # per-shard degraded rounds until the collective executable lands —
+        # a shard_map round cannot run partially compiled, so the unit of
+        # asynchrony is the full sharded executable, not one shard's.
+        self.async_compile = bool(async_compile and compiled and bucketed)
         self.compile_workers = int(compile_workers)
         self.compile_timeout_s = float(compile_timeout_s)
         self._compiler = None
@@ -296,6 +370,19 @@ class ServeEngine:
         # a hot-swap. ``_seen_lm_counts`` feeds the persisted warmset.
         self._awaiting: set[str] = set()
         self._seen_lm_counts: set[int] = set()
+        # Round pipelining (DESIGN.md §9): while round t's bucket program is
+        # in flight on device, the next LM feed round is planned and packed
+        # on the host. ``_spec`` holds the speculative (plan, graph,
+        # scheduler snapshot) for round t+1; ``_promoted`` hands the packed
+        # graph to ``_run_lm_round`` once the plan is promoted at commit.
+        # Speculation is only provably safe on the single-shard bucketed
+        # feed path — completions depend solely on host counters there, so
+        # a bail-out on any predicted completion/deadline/park keeps
+        # outputs bit-identical to the serial loop.
+        self.pipeline = bool(pipeline and compiled and bucketed
+                             and self.n_shards == 1)
+        self._spec: Any = None
+        self._promoted: Any = None
         self._interp_executors: dict[str, Any] = {}
         # The feed-graph path pads the *total* entry count itself, so the
         # scheduler's decode-count padding would only compound (dummy
@@ -571,6 +658,10 @@ class ServeEngine:
                         self._now = nxt
                 self.step()
                 if self._round > self.max_rounds:
+                    # A live speculative pack must roll back before the
+                    # budget drain, so drained requests see the same
+                    # scheduler/queue state as the serial loop would.
+                    self._cancel_spec()
                     self._drain_round_budget()
                     break
             if self._compiler is not None:
@@ -619,10 +710,19 @@ class ServeEngine:
         tr.mark_round(self._round)
         t_round = time.perf_counter()
         with tr.span("serve.round", round=self._round):
-            self._enforce_deadlines()
-            with tr.span("round.schedule"):
-                plan = self.scheduler.plan_round(self.queue, self._now,
-                                                 validate=self._validate)
+            # A plan speculatively packed during round t-1's in-flight
+            # dispatch is promoted here if the world still matches the
+            # prediction; otherwise (or with no speculation) the serial
+            # schedule path runs. Promotion re-runs the exact side effects
+            # the serial path would: the plan was computed against the same
+            # (queue, scheduler, now) state, so stamping below is identical.
+            self._promoted = None
+            plan = self._promote_spec()
+            if plan is None:
+                self._enforce_deadlines()
+                with tr.span("round.schedule"):
+                    plan = self.scheduler.plan_round(self.queue, self._now,
+                                                     validate=self._validate)
             tw = time.perf_counter()
             for req, detail in plan.invalid:
                 req.admit_round = self._round
@@ -868,13 +968,7 @@ class ServeEngine:
                         self._injector.on_exec(self._round, "bucketed")
                     res = ex.run_packed(graph, pack, es, params=params)
                     self.quarantine.clear(qkey)
-                    if jobsig in self._awaiting:
-                        self._awaiting.discard(jobsig)
-                        self.stats.n_hotswaps += 1
-                        self._metrics.counter("compile.hotswaps").inc()
-                        self.tracer.event("compile.hotswap", cat="compile",
-                                          sig=jobsig, family=fam,
-                                          round=self._round)
+                    self._note_hotswap(jobsig, fam)
                     return res, "bucketed"
                 except Exception as exc:
                     self.quarantine.record_failure(qkey, self._round, exc)
@@ -960,6 +1054,73 @@ class ServeEngine:
         return self._compiler.submit(jobsig, build, family=fam, kind=kind,
                                      describe=describe)
 
+    def _note_hotswap(self, jobsig: str | None, fam: str) -> None:
+        """First compiled round after degraded ones counts as a hot-swap
+        (single site shared by the serial, pipelined, and sharded paths)."""
+        if jobsig is None or jobsig not in self._awaiting:
+            return
+        self._awaiting.discard(jobsig)
+        self.stats.n_hotswaps += 1
+        self._metrics.counter("compile.hotswaps").inc()
+        self.tracer.event("compile.hotswap", cat="compile", sig=jobsig,
+                          family=fam, round=self._round)
+
+    def _sharded_jobsig(self, fam: str, graphs, ex) -> str:
+        return _sig_digest(("csjob", fam,
+                            tuple(g.topology_key() if g is not None else None
+                                  for g in graphs),
+                            policy_cache_key(self.policy_for(fam)),
+                            ex.n_shards))
+
+    def _submit_sharded_job(self, fam: str, ex, pol, graphs, jobsig: str,
+                            shard_params: Any) -> bool:
+        """Queue the background build of the *collective* shard_map
+        executable — the K>1 twin of ``_submit_compile_job``. One job owns
+        the whole sharded lowering (per-shard packs + the shard_map
+        build): a shard_map round cannot run partially compiled, so the
+        unit of asynchrony is the full sharded executable."""
+        if self._compiler is None or self._compiler.in_flight(jobsig):
+            return False
+        describe = {}
+        g0 = graphs[0] if graphs else None
+        if fam == "lm" and g0 is not None and len(g0) % 4 == 0:
+            describe = {"family": "lm", "count": len(g0) // 4,
+                        "sharded": True}
+
+        def build(job, span_args, abort):
+            scratch = ExecStats()
+            packs = [ex.pack_for(g, pol, scratch) for g in graphs
+                     if g is not None]
+            sspec = replace(packs[0].spec, n_shards=ex.n_shards)
+            job.qkey = (fam, sspec)
+            _, _, dt = ex.build_sharded_executable(sspec, ex.params,
+                                                   shard_params,
+                                                   span_args=span_args,
+                                                   abort_check=abort)
+            return scratch.lower_time + dt
+
+        return self._compiler.submit(jobsig, build, family=fam,
+                                     kind="sharded", describe=describe)
+
+    def _lm_sharded_ready(self, ex, graphs, pool) -> tuple[bool, str]:
+        """Pure probe for the sharded lm round: True when every shard's
+        host pack and the collective shard_map executable are cached.
+        Otherwise the build is submitted (deduped inside the service) and
+        the caller serves this round per-shard degraded."""
+        pol = self.policy_for("lm")
+        shard_params = {"slots": pool}
+        jobsig = self._sharded_jobsig("lm", graphs, ex)
+        packs = [ex.pack_ready(g, pol) for g in graphs]
+        if (all(p is not None for p in packs)
+                and len({p.spec for p in packs}) == 1):
+            sspec = replace(packs[0].spec, n_shards=ex.n_shards)
+            if ex.sharded_executable_ready(sspec, ex.params, shard_params):
+                return True, jobsig
+        self._submit_sharded_job("lm", ex, pol, list(graphs), jobsig,
+                                 shard_params)
+        self._awaiting.add(jobsig)
+        return False, jobsig
+
     # -- speculative warm-start (DESIGN.md §8) --------------------------------
 
     def warmset(self) -> dict:
@@ -1000,6 +1161,19 @@ class ServeEngine:
         pol = self.policy_for("lm")
         params = {"slots": self._lm_pool()}
         self._seen_lm_counts.add(count)
+        if self.n_shards > 1:
+            # The warm target is the collective shard_map executable (one
+            # identical all-dummy graph per shard shares its signature
+            # with any real round of this padded count).
+            graphs = [g] * self.n_shards
+            pack = ex.pack_ready(g, pol)
+            if pack is not None:
+                sspec = replace(pack.spec, n_shards=ex.n_shards)
+                if ex.sharded_executable_ready(sspec, ex.params, params):
+                    return 0
+            jobsig = self._sharded_jobsig("lm", graphs, ex)
+            return int(self._submit_sharded_job("lm", ex, pol, graphs,
+                                                jobsig, params))
         pack = ex.pack_ready(g, pol)
         if pack is not None and ex.executable_ready(pack, params):
             return 0
@@ -1007,6 +1181,325 @@ class ServeEngine:
                               policy_cache_key(pol)))
         return int(self._submit_compile_job("lm", ex, pol, g, jobsig,
                                             params, kind="warm"))
+
+    # -- round pipelining (DESIGN.md §9) --------------------------------------
+    #
+    # While round t's bucket program is in flight on device, the host plans
+    # and packs round t+1. Completions, deadlines, and slot assignment all
+    # depend only on host-side counters (``n_fed`` vs ``len(feed)``,
+    # ``len(out)`` vs ``max_new``, the virtual clock) — never on token
+    # *values* — so round t+1's plan is a pure function of state known at
+    # dispatch time *unless* commit t completes a request, times one out,
+    # or restores a parked evacuee. Speculation bails out on any such
+    # prediction, which makes bit-identity structural rather than hopeful:
+    # a promoted plan is exactly the plan the serial loop would have built.
+
+    def _expired_at(self, req, now: float) -> bool:
+        return req.deadline is not None and now > req.deadline
+
+    def _spec_snapshot(self) -> tuple:
+        q, s = self.queue, self.scheduler
+        return (list(q._heap), list(s.active), dict(s.slot_of),
+                [list(d) for d in s._free], list(s.waiting_lm))
+
+    def _restore_spec_snapshot(self, snap: tuple, feed_undo: list) -> None:
+        heap, active, slot_of, free, waiting = snap
+        q, s = self.queue, self.scheduler
+        q._heap[:] = heap
+        s.active[:] = active
+        s.slot_of.clear()
+        s.slot_of.update(slot_of)
+        for d, vals in zip(s._free, free):
+            d.clear()
+            d.extend(vals)
+        s.waiting_lm.clear()
+        s.waiting_lm.extend(waiting)
+        for req, feed, n_fed in feed_undo:
+            req.feed = feed
+            req.n_fed = n_fed
+
+    def _cancel_spec(self) -> None:
+        """Roll back the speculative round t+1 pack (round-t failure, stale
+        prediction, snapshot/drain boundary). Queue, scheduler, and request
+        feed state return to exactly their pre-speculation values, so the
+        serial re-plan sees the same world the serial loop would have."""
+        spec, self._spec = self._spec, None
+        if spec is None:
+            return
+        self._restore_spec_snapshot(spec.snap, spec.feed_undo)
+        self.stats.n_spec_cancelled += 1
+        self.tracer.event("round.spec_cancelled", cat="round",
+                          round=spec.round)
+
+    def drain_inflight(self) -> None:
+        """Quiesce cross-round in-flight state before an external observer
+        reads the engine (checkpoint snapshot, mesh resize). Device work is
+        always committed within the round that issued it — the only state
+        crossing a round boundary is the speculative next-round pack, which
+        rolls back here (it re-plans identically on resume)."""
+        self._cancel_spec()
+
+    def _speculate_next(self, plan: RoundPlan, entries: list) -> None:
+        """Plan and pack round t+1 while round t is in flight. Bails (no
+        speculation) when commit t could reshape the plan: a predicted
+        completion frees a slot; an expired deadline evicts; a parked
+        evacuee restore writes the pool. ``entries`` is round t's live
+        entry list — its counters predict commit t exactly."""
+        if self._spec is not None:
+            self._cancel_spec()
+        for e in entries:
+            req = e.req
+            fed_only = (req.feed is not None
+                        and req.n_fed + 1 < len(req.feed))
+            if not fed_only and len(req.out) + 1 >= req.max_new:
+                return
+        round1 = self._round + 1
+        delay = (self._injector.round_delay(self._round)
+                 if self._injector is not None else 0.0)
+        now1 = max(self._now + delay + 1.0, float(round1))
+        sched = self.scheduler
+        for req in list(sched.active) + list(sched.waiting_lm):
+            if self._expired_at(req, now1):
+                return
+        snap = self._spec_snapshot()
+        feed_undo: list = []
+        try:
+            with self.tracer.span("round.schedule", overlap=True,
+                                  round=round1):
+                nplan = sched.plan_round(self.queue, now1,
+                                         validate=self._validate)
+            for e in nplan.prefills:
+                if e.req is not None and e.req.park:
+                    raise _SpecUnsafe  # park restore has pool side effects
+            for req in nplan.admitted:
+                if self._expired_at(req, now1):
+                    raise _SpecUnsafe  # serial would timeout-at-admission
+            with self.tracer.span("round.pack", overlap=True, round=round1):
+                for e in nplan.prefills:
+                    req = e.req
+                    if req is None or req.feed is not None:
+                        continue
+                    # build_lm_feed_round_graph reads the next feed token,
+                    # so fresh prefills need their padded prompt staged now
+                    # (recorded for rollback; _start_feed re-runs this
+                    # idempotently at promotion).
+                    feed_undo.append((req, req.feed, req.n_fed))
+                    Lb = bucket_len(len(req.prompt),
+                                    sched.prefill_bucket_min)
+                    req.feed = ([0] * (Lb - len(req.prompt))
+                                + list(req.prompt))
+                    req.n_fed = 0
+                graph, nentries = build_lm_feed_round_graph(nplan)
+                if graph is not None and self._compiler is None:
+                    # Warm the host-side pack (index vectors, bucket spec)
+                    # now — at promotion the dispatch hits the plan cache.
+                    # With the async service the workers own all lowering,
+                    # so the loop keeps to pure cache probes.
+                    ex = self._executor("lm")
+                    ex.pack_for(graph, self.policy_for("lm"),
+                                self._exec_stats["lm"])
+        except _SpecUnsafe:
+            self._restore_spec_snapshot(snap, feed_undo)
+            return
+        except Exception:
+            # A planner/packer crash here would hit the serial loop too —
+            # roll back and let round t+1 reproduce it on-loop, where the
+            # normal containment ladder owns it.
+            self._restore_spec_snapshot(snap, feed_undo)
+            return
+        self._spec = _Speculation(round1, now1, nplan, graph,
+                                  list(nentries), snap, feed_undo)
+        self.stats.n_overlapped_packs += 1
+
+    def _promote_spec(self) -> RoundPlan | None:
+        """Commit-boundary guard: hand the speculative plan to step() iff
+        the world still matches the prediction — same round and clock, no
+        entry gone terminal, no deadline newly expired (the serial loop's
+        ``_enforce_deadlines`` would then be a no-op, so skipping it is
+        sound). Anything else rolls back and round t+1 plans serially."""
+        spec, self._spec = self._spec, None
+        if spec is None:
+            return None
+        sched = self.scheduler
+        stale = (spec.round != self._round or spec.now != self._now
+                 or any(e.req.terminal for e in spec.entries)
+                 or any(self._expired(r) for r in sched.active)
+                 or any(self._expired(r) for r in sched.waiting_lm))
+        if stale:
+            self._restore_spec_snapshot(spec.snap, spec.feed_undo)
+            self.stats.n_spec_cancelled += 1
+            self.tracer.event("round.spec_cancelled", cat="round",
+                              round=spec.round)
+            return None
+        self._promoted = (spec.graph, spec.entries)
+        self.tracer.event("round.spec_promoted", cat="round",
+                          round=spec.round, n=len(spec.entries))
+        return spec.plan
+
+    def _refresh_feed_aux(self, graph, entries) -> None:
+        """Re-stamp each entry's embed-node token: the speculative pack ran
+        before commit t, so decode entries' aux still holds the *previous*
+        token (round t's argmax had not landed). Topology keys hash only
+        (type, inputs) — aux is a runtime operand — so the pack and
+        executable caches keyed off this graph are untouched."""
+        for e in entries:
+            # Fragment layout is R,E,C,O: the embed node precedes the cell.
+            graph.nodes[e.cell_node - 1].attrs["aux"] = next_feed_token(e.req)
+
+    def _dispatch_lm(self, graph, pool, coarse_fn):
+        """Non-blocking counterpart of ``_exec_graph`` for the lm feed
+        round: returns ``(handle, tier, qkey, jobsig)`` where ``handle``
+        is in flight for real bucketed dispatches and pre-resolved
+        (``_ReadyRound``) for the coarse/interpreted tiers, or ``None``
+        when even the floor failed (caller isolates per entry). Quarantine
+        *clearing* and hot-swap accounting move to commit — a dispatch is
+        not a success until its results materialize."""
+        fam = "lm"
+        ex = self._executor(fam)
+        pol = self.policy_for(fam)
+        es = self._exec_stats[fam]
+        params = {"slots": pool}
+        if self._compiler is not None:
+            return self._dispatch_lm_async(fam, ex, pol, es, graph, params,
+                                           coarse_fn)
+        qkey = None
+        try:
+            pack = ex.pack_for(graph, pol, es)
+            qkey = (fam, pack.spec)
+            if not self.quarantine.blocks(qkey, self._round):
+                if self._injector is not None:
+                    self._injector.on_exec(self._round, "bucketed")
+                handle = ex.dispatch_packed(graph, pack, es, params=params)
+                return handle, "bucketed", qkey, None
+        except Exception as exc:
+            if qkey is not None:
+                self.quarantine.record_failure(qkey, self._round, exc)
+            self._contained()
+        return self._floor_handle(fam, graph, params)
+
+    def _dispatch_lm_async(self, fam, ex, pol, es, graph, params,
+                           coarse_fn):
+        """Async-compile twin of ``_exec_graph_async`` that dispatches
+        instead of running: ready native bucket -> in-flight handle; not
+        ready -> submit the build and serve this round eagerly through the
+        coarse bridge or the interpreted floor (transitional tiers — no
+        overlap is lost by not pipelining them)."""
+        jobsig = _sig_digest(("cjob", fam, graph.topology_key(),
+                              policy_cache_key(pol)))
+        pack = ex.pack_ready(graph, pol)
+        blocked = (pack is not None
+                   and self.quarantine.blocks((fam, pack.spec),
+                                              self._round))
+        if pack is not None and not blocked:
+            qkey = (fam, pack.spec)
+            if ex.executable_ready(pack, params):
+                try:
+                    if self._injector is not None:
+                        self._injector.on_exec(self._round, "bucketed")
+                    handle = ex.dispatch_packed(graph, pack, es,
+                                                params=params)
+                    return handle, "bucketed", qkey, jobsig
+                except Exception as exc:
+                    self.quarantine.record_failure(qkey, self._round, exc)
+                    self._contained()
+                    return self._floor_handle(fam, graph, params)
+        if not blocked:
+            self._submit_compile_job(fam, ex, pol, graph, jobsig, params)
+            self._awaiting.add(jobsig)
+            cres = self._try_coarse(fam, ex, pol, es, graph, params,
+                                    coarse_fn)
+            if cres is not None:
+                return _ReadyRound(cres), "coarse", None, None
+        return self._floor_handle(fam, graph, params)
+
+    def _floor_handle(self, fam, graph, params):
+        """Interpreted floor as a pre-resolved handle; ``None`` if even the
+        floor raises (the caller then isolates per entry, mirroring the
+        serial ladder's terminal behaviour)."""
+        pol = self.policy_for(fam)
+        es = self._exec_stats[fam]
+        try:
+            res = self._interp_executor(fam).run(graph, pol, es,
+                                                 params=params)
+        except Exception:
+            return None
+        return _ReadyRound(res), "interpreted", None, None
+
+    def _run_lm_round_pipelined(self, plan, wl, pool, graph, entries,
+                                coarse_fn) -> None:
+        """Two-stage round: dispatch round t without blocking, overlap the
+        host-side plan+pack of round t+1 with the in-flight device work,
+        then commit — block on t's arenas, scatter, feed. A commit failure
+        (device error surfacing at block, or an injected commit fault)
+        cancels the speculation *first*, so the containment ladder and the
+        re-planned round t+1 both see rolled-back state."""
+        rd = self._dispatch_lm(graph, pool, coarse_fn)
+        if rd is None:
+            self._contained()
+            return self._isolate_lm_round(plan, wl, True)
+        handle, tier, qkey, jobsig = rd
+        if self.pipeline and handle.pending:
+            self._speculate_next(plan, entries)
+        try:
+            if self._injector is not None:
+                self._injector.on_commit(self._round)
+        except Exception:
+            # Injected commit fault: the round's results are abandoned, the
+            # speculative t+1 rolls back, entries re-run isolated. No
+            # quarantine — the bucket executable did nothing wrong.
+            self._cancel_spec()
+            self._contained()
+            return self._isolate_lm_round(plan, wl, True)
+        try:
+            res = handle.block()
+            if qkey is not None:
+                self.quarantine.clear(qkey)
+        except Exception as exc:
+            self._cancel_spec()
+            if qkey is not None:
+                self.quarantine.record_failure(qkey, self._round, exc)
+            self._contained()
+            return self._isolate_lm_round(plan, wl, True)
+        self._note_tier(tier)
+        self._note_hotswap(jobsig, "lm")
+        if tier == "bucketed":
+            self.stats.n_pipelined_rounds += 1
+        with self.tracer.span("round.scatter"):
+            toks = self._scatter_commit(res, entries, wl, pool)
+        with self.tracer.span("round.feed"):
+            self._feed_tokens(entries, toks, time.perf_counter(),
+                              self._shard_stats[0])
+
+    def _scatter_commit(self, res, entries, wl, pool):
+        """Commit one lm round's results: next-token argmax plus the state
+        scatter-back into the slot pool. Dummy pads carry no entry, so
+        their slot-0 reads are never written back. Plan-backed results
+        expose their arenas (``PlanResult.arena_rows``), letting the whole
+        commit run as one jitted dispatch instead of ~2 eager dispatches
+        per state field; the interpreted floor's ``ExecResult`` takes the
+        eager per-field path."""
+        o_ids = [e.o_node for e in entries]
+        cell_ids = [e.cell_node for e in entries]
+        slots = np.asarray([e.slot for e in entries], np.int32)
+        fields = list(wl.state_fields)
+        if hasattr(res, "arena_rows"):
+            y_arena, y_rows = res.arena_rows("y", o_ids)
+            arenas, rows = [], []
+            for f in fields:
+                a, r = res.arena_rows(f, cell_ids)
+                arenas.append(a)
+                rows.append(r)
+            toks, new_pools = _fused_commit(y_arena, y_rows, slots,
+                                            arenas, rows,
+                                            [pool[f] for f in fields])
+            for f, p in zip(fields, new_pools):
+                pool[f] = p
+            return np.asarray(toks)
+        ys = np.asarray(res.field("y", o_ids))
+        toks = np.argmax(ys, axis=-1)
+        for f in fields:
+            pool[f] = pool[f].at[slots].set(res.field(f, cell_ids))
+        return toks
 
     # -- per-family round execution -----------------------------------------
 
@@ -1039,8 +1532,11 @@ class ServeEngine:
                 for f in wl.state_fields:
                     pool[f] = pool[f].at[shards, slots].set(0.0)
             else:
-                for f in wl.state_fields:
-                    pool[f] = pool[f].at[slots].set(0.0)
+                fields = list(wl.state_fields)
+                for f, p in zip(fields,
+                                _fused_zero(slots,
+                                            [pool[f] for f in fields])):
+                    pool[f] = p
         for e in parked:
             state, e.req.park = e.req.park, None
             for f in wl.state_fields:
@@ -1075,20 +1571,42 @@ class ServeEngine:
         wl = self.family("lm")
         pool = self._lm_pool()
         feed_mode = self.compiled and self.bucketed
-        with self.tracer.span("round.pack"):
-            if feed_mode:
+        promoted, self._promoted = self._promoted, None
+        if promoted is not None:
+            # The graph was packed during round t-1's in-flight dispatch;
+            # only the cheap residue runs on-loop: slot zeroing for fresh
+            # prefills (after round t-1's scatter, same order as serial)
+            # and re-stamping feed tokens that round t-1's argmax decided.
+            graph, entries = promoted
+            # Feed staging is commit-time pool work (it writes the slots
+            # round t's scatter just released), not packing — its own span
+            # keeps ``round.pack`` an honest measure of what speculation
+            # can and did hide.
+            with self.tracer.span("round.feed_stage"):
                 self._start_feed(plan, wl, pool)
-                graph, entries = build_lm_feed_round_graph(plan)
+            with self.tracer.span("round.pack", promoted=True):
                 if graph is not None:
-                    # Padded entry count (4 nodes per R,E,C,O fragment):
-                    # the warmset descriptor for this round's signature.
+                    self._refresh_feed_aux(graph, entries)
                     self._seen_lm_counts.add(len(graph) // 4)
-            else:
-                graph = build_lm_round_graph(
-                    plan,
-                    prefill_bucket_min=self.scheduler.prefill_bucket_min)
-                entries = [e for e in plan.prefills + plan.decodes
-                           if e.req is not None]
+        else:
+            if feed_mode:
+                with self.tracer.span("round.feed_stage"):
+                    self._start_feed(plan, wl, pool)
+            with self.tracer.span("round.pack"):
+                if feed_mode:
+                    graph, entries = build_lm_feed_round_graph(plan)
+                    if graph is not None:
+                        # Padded entry count (4 nodes per R,E,C,O
+                        # fragment): the warmset descriptor for this
+                        # round's signature.
+                        self._seen_lm_counts.add(len(graph) // 4)
+                else:
+                    graph = build_lm_round_graph(
+                        plan,
+                        prefill_bucket_min=self.scheduler
+                        .prefill_bucket_min)
+                    entries = [e for e in plan.prefills + plan.decodes
+                               if e.req is not None]
         if graph is None:
             return
         coarse_fn = None
@@ -1098,10 +1616,17 @@ class ServeEngine:
             # the scatter below reads the same o/cell nodes either way.
             def coarse_fn(count):
                 return build_lm_feed_round_graph(plan, count=count)[0]
+        if self.pipeline and feed_mode:
+            return self._run_lm_round_pipelined(plan, wl, pool, graph,
+                                                entries, coarse_fn)
         try:
             res, tier = self._exec_graph("lm", graph,
                                          params={"slots": pool},
                                          coarse_fn=coarse_fn)
+            if self._injector is not None:
+                # Commit-fault parity with the pipelined path: the serial
+                # loop's commit boundary sits right after execution.
+                self._injector.on_commit(self._round)
         except Exception:
             # Even the interpreted floor failed on the merged graph:
             # isolate per entry so one bad request cannot starve the rest.
@@ -1109,16 +1634,7 @@ class ServeEngine:
             return self._isolate_lm_round(plan, wl, feed_mode)
         self._note_tier(tier)
         with self.tracer.span("round.scatter"):
-            ys = np.asarray(res.field("y", [e.o_node for e in entries]))
-            toks = np.argmax(ys, axis=-1)
-            # Scatter live-request cell states back into the slot pool.
-            # Dummy pads are excluded, so their slot-0 reads are never
-            # written back.
-            cell_ids = [e.cell_node for e in entries]
-            slots = np.asarray([e.slot for e in entries], np.int32)
-            for f in wl.state_fields:
-                vals = res.field(f, cell_ids)
-                pool[f] = pool[f].at[slots].set(vals)
+            toks = self._scatter_commit(res, entries, wl, pool)
         with self.tracer.span("round.feed"):
             self._feed_tokens(entries, toks, time.perf_counter(),
                               self._shard_stats[0])
@@ -1171,8 +1687,9 @@ class ServeEngine:
         therefore one bucket signature."""
         wl = self.family("lm")
         pool = self._lm_pool()
-        with self.tracer.span("round.pack"):
+        with self.tracer.span("round.feed_stage"):
             self._start_feed(plan, wl, pool)
+        with self.tracer.span("round.pack"):
             shard_plans = [RoundPlan() for _ in range(self.n_shards)]
             for e in plan.prefills:
                 shard_plans[e.shard].prefills.append(e)
@@ -1186,6 +1703,16 @@ class ServeEngine:
             built = [build_lm_feed_round_graph(sp, count=target)
                      for sp in shard_plans]
         ex = self._executor("lm")
+        jobsig = None
+        if self._compiler is not None:
+            # Async sharded compile (DESIGN.md §8): the collective shard_map
+            # build runs on a compile worker; until it lands, rounds serve
+            # per-shard through the already-degraded path instead of
+            # blocking the loop on the (expensive) shard_map lowering.
+            ready, jobsig = self._lm_sharded_ready(ex, [g for g, _ in built],
+                                                   pool)
+            if not ready:
+                return self._lm_round_sharded_degrade(ex, built, wl, pool)
         try:
             if self._injector is not None:
                 self._injector.on_exec(self._round, "sharded")
@@ -1194,6 +1721,7 @@ class ServeEngine:
                                      self._exec_stats["lm"],
                                      shard_params={"slots": pool})
             self._note_tier("sharded")
+            self._note_hotswap(jobsig, "lm")
         except Exception:
             # First rung of the ladder: retry shard by shard through the
             # inherited single-device bucketed path.
@@ -1307,42 +1835,50 @@ class ServeEngine:
 
     def _run_single_shot_sharded(self, fam: str,
                                  reqs: list[ServeRequest]) -> None:
-        """Single-shot graphs balance across shards by node count; rounds
-        whose shard graphs don't land on one bucket signature (or leave
-        shards idle) degrade to per-shard dispatch inside the executor."""
+        """Single-shot graphs balance across shards by node count. Rounds
+        whose shard merges don't land on one bucket signature (diverging
+        topology mixes, idle shards) re-merge through
+        ``align_single_shot_groups`` — dummy-padded toward one canonical
+        shared spec — so the round still dispatches collectively instead
+        of degrading per shard. With the async service the collective
+        shard_map build runs on a compile worker and rounds serve
+        per-shard degraded until it lands."""
         groups = partition_singles(reqs, self.n_shards)
         built = [merge_request_graphs(grp) if grp else (None, [])
                  for grp in groups]
         ex = self._executor(fam)
+        pol = self.policy_for(fam)
+        es = self._exec_stats[fam]
+        try:
+            packs = [ex.pack_for(g, pol, es) if g is not None else None
+                     for g, _ in built]
+            if (any(p is None for p in packs)
+                    or len({p.spec for p in packs if p is not None}) != 1):
+                built = align_single_shot_groups(groups)
+                self.stats.n_merge_aligned_rounds += 1
+                self.tracer.event("round.merge_aligned", cat="round",
+                                  family=fam, round=self._round)
+        except Exception:
+            # Alignment is an optimization: any failure falls back to the
+            # original merges and the normal ladder below.
+            self._contained()
+        jobsig = None
+        if self._compiler is not None:
+            ready, jobsig = self._single_shot_sharded_ready(fam, ex, built)
+            if not ready:
+                return self._single_shot_sharded_degrade(fam, ex, groups,
+                                                         built)
         try:
             if self._injector is not None:
                 self._injector.on_exec(self._round, "sharded")
-            results = ex.run_sharded([g for g, _ in built],
-                                     self.policy_for(fam),
-                                     self._exec_stats[fam])
+            results = ex.run_sharded([g for g, _ in built], pol, es)
             self._note_tier("sharded")
+            self._note_hotswap(jobsig, fam)
         except Exception:
             # Ladder: per-shard bucketed retry, then per-request isolation
             # on the interpreted floor for any shard that still fails.
             self._contained()
-            self._note_tier("bucketed")
-            for s, (grp, (g, out_ids)) in enumerate(zip(groups, built)):
-                if not grp:
-                    continue
-                st = self._shard_stats[s]
-                try:
-                    res = ex.run(g, self.policy_for(fam),
-                                 self._exec_stats[fam])
-                    now = time.perf_counter()
-                    for req, ids in zip(grp, out_ids):
-                        req.result = np.asarray(res.field("y", ids))
-                        req.t_first = now
-                        st.outputs_out += len(ids)
-                        self._finish(req, now, st)
-                except Exception:
-                    self._contained()
-                    self._isolate_single_shot(fam, grp, st)
-            return
+            return self._single_shot_sharded_degrade(fam, ex, groups, built)
         now = time.perf_counter()
         for s, (grp, (_, out_ids)) in enumerate(zip(groups, built)):
             res, st = results[s], self._shard_stats[s]
@@ -1351,6 +1887,52 @@ class ServeEngine:
                 req.t_first = now
                 st.outputs_out += len(ids)
                 self._finish(req, now, st)
+
+    def _single_shot_sharded_ready(self, fam: str, ex,
+                                   built) -> tuple[bool, str | None]:
+        """Probe the collective single-shot executable; submit the build
+        when absent. Shard merges that (still) diverge have no collective
+        build to wait for — ``run_sharded`` falls back internally — so
+        they count as ready."""
+        pol = self.policy_for(fam)
+        es = self._exec_stats[fam]
+        graphs = [g for g, _ in built]
+        packs = [ex.pack_for(g, pol, es) if g is not None else None
+                 for g in graphs]
+        specs = {p.spec for p in packs if p is not None}
+        if any(p is None for p in packs) or len(specs) != 1:
+            return True, None
+        jobsig = self._sharded_jobsig(fam, graphs, ex)
+        sspec = replace(packs[0].spec, n_shards=ex.n_shards)
+        if ex.sharded_executable_ready(sspec, ex.params, None):
+            return True, jobsig
+        self._submit_sharded_job(fam, ex, pol, graphs, jobsig, None)
+        self._awaiting.add(jobsig)
+        return False, jobsig
+
+    def _single_shot_sharded_degrade(self, fam: str, ex, groups,
+                                     built) -> None:
+        """Per-shard bucketed retry (also the bridge tier while the
+        collective build is in flight); shards that still fail isolate
+        per request on the interpreted floor."""
+        pol = self.policy_for(fam)
+        es = self._exec_stats[fam]
+        self._note_tier("bucketed")
+        for s, (grp, (g, out_ids)) in enumerate(zip(groups, built)):
+            if not grp:
+                continue
+            st = self._shard_stats[s]
+            try:
+                res = ex.run(g, pol, es)
+                now = time.perf_counter()
+                for req, ids in zip(grp, out_ids):
+                    req.result = np.asarray(res.field("y", ids))
+                    req.t_first = now
+                    st.outputs_out += len(ids)
+                    self._finish(req, now, st)
+            except Exception:
+                self._contained()
+                self._isolate_single_shot(fam, grp, st)
 
     def _finish(self, req: ServeRequest, now: float,
                 st: ServeStats | None = None) -> None:

@@ -235,6 +235,13 @@ class FaultInjector:
       dispatch raises (once per listed round). The interpreted floor is
       never injected, so the degradation ladder always has a way out —
       which is exactly the recovery property under test.
+    - ``commit_fail_rounds``: engine rounds whose *commit* (the lazy
+      ``block_until_ready`` on an in-flight dispatch) raises, once per
+      listed round. Fires after the dispatch already succeeded — i.e.
+      while a pipelined engine may hold a speculatively packed round t+1 —
+      which is exactly the cancellation path under test. The serial
+      engine fires it at the equivalent point (after dispatch, before
+      scatter) so both paths see the same fault.
     - ``slow_rounds``: per-round virtual-time penalties (round -> extra
       virtual ms), applied before the engine's deadline check so deadline
       enforcement can be exercised deterministically.
@@ -258,7 +265,8 @@ class FaultInjector:
                  shard_lost: dict[int, int] | None = None,
                  shard_back_rounds=(),
                  compile_hang: tuple[int, float] | None = None,
-                 compile_slow: tuple[int, float] | None = None):
+                 compile_slow: tuple[int, float] | None = None,
+                 commit_fail_rounds=()):
         self.compile_fail = int(compile_fail)
         self.compile_hang = ((int(compile_hang[0]), float(compile_hang[1]))
                              if compile_hang else (0, 0.0))
@@ -267,6 +275,8 @@ class FaultInjector:
         self.fired_hang = 0
         self.fired_slow = 0
         self.exec_fail_rounds = frozenset(int(r) for r in exec_fail_rounds)
+        self.commit_fail_rounds = frozenset(int(r)
+                                            for r in commit_fail_rounds)
         self.slow_rounds = {int(k): float(v)
                             for k, v in (slow_rounds or {}).items()}
         self.poison = int(poison)
@@ -277,8 +287,10 @@ class FaultInjector:
                                            for r in shard_back_rounds)
         self.fired_compile = 0
         self.fired_exec = 0
+        self.fired_commit = 0
         self.fired_crash = 0
         self._exec_armed = set(self.exec_fail_rounds)
+        self._commit_armed = set(self.commit_fail_rounds)
         self._crash_armed = set(self.crash_rounds)
         self._shard_armed = dict(self.shard_lost)
         self._back_armed = set(self.shard_back_rounds)
@@ -327,6 +339,15 @@ class FaultInjector:
             raise InjectedFault(
                 f"injected executor failure at round {round_} ({tier})")
 
+    def on_commit(self, round_: int) -> None:
+        """Called by the engine at round commit (after dispatch succeeded,
+        before results are consumed), once per armed round."""
+        if round_ in self._commit_armed:
+            self._commit_armed.discard(round_)
+            self.fired_commit += 1
+            raise InjectedFault(
+                f"injected commit failure at round {round_}")
+
     def round_delay(self, round_: int) -> float:
         return self.slow_rounds.get(round_, 0.0)
 
@@ -362,7 +383,7 @@ class FaultInjector:
         ``round*shard`` pairs::
 
             compile_fail=2,exec_rounds=3:7,slow=5*4.0:9*2.0,poison=2
-            crash=8,shard_lost=5*1,shard_back=12
+            crash=8,shard_lost=5*1,shard_back=12,commit=4
             compile_hang=1*10.0,compile_slow=2*0.5
 
         ``compile_hang``/``compile_slow`` take a single ``N*seconds`` pair:
@@ -388,6 +409,8 @@ class FaultInjector:
                 kw[k] = (int(n), float(s))
             elif k == "exec_rounds":
                 kw["exec_fail_rounds"] = [int(x) for x in v.split(":") if x]
+            elif k == "commit":
+                kw["commit_fail_rounds"] = [int(x) for x in v.split(":") if x]
             elif k == "slow":
                 slow = {}
                 for entry in v.split(":"):
@@ -413,8 +436,8 @@ class FaultInjector:
             else:
                 raise ValueError(
                     f"unknown fault spec key {k!r} (known: compile_fail, "
-                    f"compile_hang, compile_slow, exec_rounds, slow, "
-                    f"poison, crash, shard_lost, shard_back)")
+                    f"compile_hang, compile_slow, exec_rounds, commit, "
+                    f"slow, poison, crash, shard_lost, shard_back)")
         return cls(**kw)
 
 

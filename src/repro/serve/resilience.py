@@ -84,7 +84,11 @@ def snapshot_engine(eng: ServeEngine, reason: str = "periodic") -> dict:
 
     Folds exec stats first so the stats section is the same absolute view
     ``run()`` would have returned; ``wall_s`` includes the elapsed wall of
-    an in-progress ``run()`` (crash checkpoints fire mid-run)."""
+    an in-progress ``run()`` (crash checkpoints fire mid-run). In-flight
+    speculation drains first (DESIGN.md §9): a snapshot must capture
+    committed state only — the rolled-back round t+1 re-plans identically
+    after restore."""
+    eng.drain_inflight()
     eng._fold_exec_stats()
     sched = eng.scheduler
     wall = eng.stats.wall_s
@@ -111,6 +115,7 @@ def snapshot_engine(eng: ServeEngine, reason: str = "periodic") -> dict:
             "async_compile": eng.async_compile,
             "compile_workers": eng.compile_workers,
             "compile_timeout_s": eng.compile_timeout_s,
+            "pipeline": eng.pipeline,
         },
         "clock": {"round": eng._round, "now": eng._now},
         "requests": [encode_request(eng.requests[rid])
@@ -219,7 +224,8 @@ def restore_engine(source, families: dict[str, Any] | None = None, *,
         compile_workers=(compile_workers if compile_workers is not None
                          else cfg.get("compile_workers", 2)),
         compile_timeout_s=(compile_timeout_s if compile_timeout_s is not None
-                           else cfg.get("compile_timeout_s", 30.0)))
+                           else cfg.get("compile_timeout_s", 30.0)),
+        pipeline=cfg.get("pipeline", True))
     with eng.tracer.span("ckpt.restore", round=payload["clock"]["round"],
                          reason=payload.get("reason", "")):
         eng._n_shards0 = int(cfg["n_shards0"])

@@ -388,15 +388,18 @@ def partition_singles(reqs: list[ServeRequest],
     return groups
 
 
-def merge_request_graphs(reqs: list[ServeRequest]) -> tuple[Graph, list[list[int]]]:
-    """Fold single-shot request graphs into one wave graph (id-offset merge).
-    Returns the merged graph and, per request, its output ("O") node ids."""
+def _merge_graphs(graphs: list[Graph]) -> tuple[Graph, list[list[int]]]:
+    """Id-offset merge of whole graphs into one wave graph; returns the
+    merged graph and, per input graph, its output ("O") node ids. ``attrs``
+    dicts are shared with the source nodes — single-shot attrs are never
+    mutated after admission, so aliasing them is safe (and keeps dummy
+    padding copies cheap)."""
     nodes: list[Node] = []
     out_ids: list[list[int]] = []
-    for req in reqs:
+    for g in graphs:
         off = len(nodes)
         mine: list[int] = []
-        for n in req.graph.nodes:
+        for n in g.nodes:
             nodes.append(Node(id=n.id + off, type=n.type,
                               inputs=tuple(p + off for p in n.inputs),
                               op=n.op, attrs=n.attrs))
@@ -404,3 +407,63 @@ def merge_request_graphs(reqs: list[ServeRequest]) -> tuple[Graph, list[list[int
                 mine.append(n.id + off)
         out_ids.append(mine)
     return Graph(nodes), out_ids
+
+
+def merge_request_graphs(reqs: list[ServeRequest]) -> tuple[Graph, list[list[int]]]:
+    """Fold single-shot request graphs into one wave graph (id-offset merge).
+    Returns the merged graph and, per request, its output ("O") node ids."""
+    return _merge_graphs([r.graph for r in reqs])
+
+
+def align_single_shot_groups(groups: list[list[ServeRequest]]
+                             ) -> list[tuple[Graph | None, list[list[int]]]]:
+    """Pad every shard's single-shot merge toward one shared bucket
+    signature (spec-aligned merging).
+
+    When shard groups hold different topology mixes — or leave a shard
+    idle — their merged wave graphs pack to different bucket specs, and
+    the sharded executor degrades the round to per-shard dispatch. This
+    rebuilds each shard's merge in a *canonical composition*: for every
+    topology class seen this round (iterated in sorted topology-key
+    order), each shard contributes its real requests of that class
+    followed by dummy copies of a representative graph, up to the max
+    per-shard count of the class. All K merged graphs then share one
+    topology — hence one schedule, one pack, one bucket signature — and
+    the round dispatches collectively; dummy outputs are computed but
+    never read. Returned out_ids are in each group's original request
+    order, so caller-side result extraction is unchanged."""
+    keys: list[int] = []
+    rep: dict[int, Graph] = {}
+    counts: list[dict[int, int]] = []
+    for grp in groups:
+        c: dict[int, int] = {}
+        for r in grp:
+            k = r.graph.topology_key()
+            if k not in rep:
+                rep[k] = r.graph
+                keys.append(k)
+            c[k] = c.get(k, 0) + 1
+        counts.append(c)
+    keys.sort()
+    target = {k: max(c.get(k, 0) for c in counts) for k in keys}
+    built: list[tuple[Graph | None, list[list[int]]]] = []
+    for grp, c in zip(groups, counts):
+        by_key: dict[int, list[int]] = {k: [] for k in keys}
+        for i, r in enumerate(grp):
+            by_key[r.graph.topology_key()].append(i)
+        graphs: list[Graph] = []
+        owner: list[int | None] = []
+        for k in keys:
+            for i in by_key[k]:
+                graphs.append(grp[i].graph)
+                owner.append(i)
+            for _ in range(target[k] - len(by_key[k])):
+                graphs.append(rep[k])
+                owner.append(None)
+        graph, all_out = _merge_graphs(graphs)
+        out_ids: list[list[int]] = [[] for _ in grp]
+        for o, ids in zip(owner, all_out):
+            if o is not None:
+                out_ids[o] = ids
+        built.append((graph, out_ids))
+    return built

@@ -1,0 +1,180 @@
+"""Round pipelining (serve/engine.py, DESIGN.md §9): while round t's
+bucket program is in flight on device, the host speculatively plans and
+packs round t+1, promoting the pack at commit iff the prediction held.
+These tests pin the safety envelope: token streams bit-identical to the
+serial loop across families and tiers, speculation cancelled (and rolled
+back) when round t's commit faults, checkpoint snapshots draining the
+in-flight pack, and warm resubmission through the donation-rotated
+arenas reproducing the same streams."""
+
+import numpy as np
+import pytest
+
+from benchmarks.fig8_decomposition import overlap_fraction, span_self_times
+from repro.models.workloads import make_workload
+from repro.obs import Obs, Tracer
+from repro.serve import InjectedCrash, ServeEngine, latest_checkpoint, \
+    synth_trace
+from repro.serve.faults import FaultInjector
+from repro.serve.queue import COMPLETED
+
+MODEL_SIZE = 8
+FAMILIES = ["lm", "tree", "lattice"]
+
+
+@pytest.fixture(scope="module")
+def workloads():
+    return {"lm": make_workload("ChainLM", MODEL_SIZE),
+            "tree": make_workload("TreeLSTM", MODEL_SIZE),
+            "lattice": make_workload("LatticeLSTM", MODEL_SIZE)}
+
+
+def _trace(workloads, n=10, rate=3.0, max_new=4, seed=0,
+           families=FAMILIES):
+    return synth_trace(families, n, rate, max_new, workloads, seed)
+
+
+def _ledger(eng):
+    """rid-sorted ledger: rids come from a process-global counter, so
+    cross-engine equivalence aligns by rank, never by rid value."""
+    return [eng.requests[rid] for rid in sorted(eng.requests)]
+
+
+def _assert_equivalent(led, ref):
+    assert len(led) == len(ref)
+    for a, b in zip(led, ref):
+        assert a.status == b.status
+        if a.status != COMPLETED:
+            continue
+        if a.family == "lm":
+            assert a.out == b.out
+        else:
+            assert np.array_equal(a.result, b.result)
+
+
+def _run(workloads, reqs, *, pipeline, **kw):
+    eng = ServeEngine(dict(workloads), compiled=True, bucketed=True,
+                      continuous=True, max_slots=4, pipeline=pipeline,
+                      **kw)
+    eng.submit_many(reqs)
+    stats = eng.run()
+    return eng, stats
+
+
+# -- bit-identity -------------------------------------------------------------
+
+
+def test_pipelined_bit_identity_across_families(workloads):
+    clean, _ = _run(workloads, _trace(workloads, seed=11), pipeline=False)
+    eng, stats = _run(workloads, _trace(workloads, seed=11), pipeline=True)
+    _assert_equivalent(_ledger(eng), _ledger(clean))
+    # The lm rounds really did pipeline: packs ran behind in-flight
+    # dispatches and were promoted at commit.
+    assert stats.n_pipelined_rounds > 0
+    assert stats.n_overlapped_packs > 0
+
+
+def test_pipelined_bit_identity_lm_only(workloads):
+    t = dict(n=16, max_new=6, families=["lm"])
+    clean, _ = _run(workloads, _trace(workloads, seed=5, **t),
+                    pipeline=False)
+    eng, stats = _run(workloads, _trace(workloads, seed=5, **t),
+                      pipeline=True)
+    _assert_equivalent(_ledger(eng), _ledger(clean))
+    assert stats.n_overlapped_packs > 0
+
+
+def test_pipeline_flag_coerced_off_without_bucketed_plans(workloads):
+    """The overlap window only exists for the bucketed one-dispatch
+    round; on the interpreted floor the flag must quietly disable."""
+    eng = ServeEngine(dict(workloads), compiled=False, bucketed=False,
+                      continuous=True, max_slots=4, pipeline=True)
+    assert eng.pipeline is False
+    reqs = _trace(workloads, seed=5, families=["lm"])
+    eng.submit_many(reqs)
+    stats = eng.run()
+    assert stats.n_pipelined_rounds == 0
+    clean, _ = _run(workloads, _trace(workloads, seed=5, families=["lm"]),
+                    pipeline=False)
+    _assert_equivalent(_ledger(eng), _ledger(clean))
+
+
+# -- fault-in-flight ----------------------------------------------------------
+
+
+def test_commit_fault_cancels_speculation(workloads):
+    """A commit-fault at round t lands while round t+1 sits speculatively
+    packed: the speculation must roll back (count it), the round's
+    entries re-run isolated, and the token streams still match a clean
+    serial run — a cancelled speculation is observationally nothing."""
+    t = dict(n=16, max_new=6, families=["lm"])
+    clean, _ = _run(workloads, _trace(workloads, seed=7, **t),
+                    pipeline=False)
+    inj = FaultInjector(commit_fail_rounds=[3])
+    eng, stats = _run(workloads, _trace(workloads, seed=7, **t),
+                      pipeline=True, fault_injector=inj)
+    assert inj.fired_commit == 1
+    assert stats.n_spec_cancelled >= 1
+    assert stats.requests_failed == 0
+    _assert_equivalent(_ledger(eng), _ledger(clean))
+
+
+# -- checkpoint/restore -------------------------------------------------------
+
+
+def test_crash_checkpoint_drains_speculation(workloads, tmp_path):
+    """A crash checkpoint fires at the round boundary, when the previous
+    round's speculative pack may still be live. The snapshot must capture
+    committed state only (the spec drains and rolls back), so the
+    restored engine replans the round identically."""
+    t = dict(n=16, max_new=6, families=["lm"])
+    clean, _ = _run(workloads, _trace(workloads, seed=9, **t),
+                    pipeline=False)
+    trace2 = _trace(workloads, seed=9, **t)
+    eng = ServeEngine(dict(workloads), compiled=True, bucketed=True,
+                      continuous=True, max_slots=4, pipeline=True,
+                      fault_injector=FaultInjector(crash_rounds=[5]),
+                      checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    eng.submit_many(trace2)
+    with pytest.raises(InjectedCrash):
+        eng.run()
+
+    r_eng = ServeEngine.restore(latest_checkpoint(str(tmp_path)),
+                                dict(workloads))
+    assert r_eng.pipeline is True      # the flag rides the checkpoint
+    r_eng.submit_many(trace2)          # full replay: dupes swallowed
+    stats = r_eng.run()
+    assert stats.requests_failed == 0
+    _assert_equivalent(_ledger(r_eng), _ledger(clean))
+
+
+# -- donation / warm resubmission --------------------------------------------
+
+
+def test_warm_resubmission_is_stable_and_overlapped(workloads):
+    """Resubmitting the same trace into a warm pipelined engine exercises
+    the donation-rotated arenas and the fused commit scatter across run
+    boundaries: the second batch must reproduce the first batch's token
+    streams, and its packs must actually run inside the overlap window
+    (the ``overlap`` stamp that fig8's --from-trace attribution reads)."""
+    tracer = Tracer(enabled=False)
+    eng = ServeEngine(dict(workloads), compiled=True, bucketed=True,
+                      continuous=True, max_slots=4, pipeline=True,
+                      obs=Obs(tracer=tracer))
+    first = _trace(workloads, n=12, max_new=5, seed=13, families=["lm"])
+    eng.submit_many(first)
+    eng.run()
+    again = _trace(workloads, n=12, max_new=5, seed=13, families=["lm"])
+    base = eng._now
+    for r in again:
+        r.arrival += base
+    tracer.enabled = True
+    eng.submit_many(again)
+    eng.run()
+    outs = lambda reqs: [r.out for r in
+                         sorted(reqs, key=lambda r: r.rid)]
+    assert outs(again) == outs(first)
+    spans = span_self_times(tracer.events)
+    assert any(s["name"] == "round.pack"
+               and s.get("args", {}).get("overlap") for s in spans)
+    assert overlap_fraction(spans) > 0.0
